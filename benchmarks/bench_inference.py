@@ -1,0 +1,70 @@
+"""Paper Apdx D.3 (Fig 19): inference — TTFT (prefill) and per-token decode
+latency per connection mode, plus continuous-batching engine throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.decode import ContinuousBatcher, Request, make_serve_step
+
+
+def bench(csv):
+    cfg0 = get_config("gpt2-117m").replace(
+        n_layers=6, d_model=256, n_heads=8, n_kv_heads=8, d_ff=1024,
+        vocab=2048, max_seq=512, dtype="float32", param_dtype="float32",
+        remat=False, attn_block_q=64, attn_block_k=128)
+    B, P = 8, 128
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, P), 0, cfg0.vocab)
+
+    base = {}
+    for mode in ("preln", "fal"):
+        cfg = cfg0.replace(connection=mode)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+        # TTFT: one full prefill forward
+        fwd = jax.jit(lambda p, b: M.forward(p, cfg, b, "prefill")[0])
+        fwd(params, {"tokens": toks}).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            out = fwd(params, {"tokens": toks})
+        out.block_until_ready()
+        ttft = (time.time() - t0) / 5
+        csv(f"inference_fig19_ttft_{mode}", ttft * 1e6,
+            f"batch={B};prompt={P}")
+
+        # decode: per-token latency
+        serve = jax.jit(make_serve_step(cfg))
+        cache = M.init_cache(cfg, B, 512, "float32")
+        nxt, _, cache = serve(params, cache, toks[:, :1],
+                              jnp.zeros((B,), jnp.int32))
+        t0 = time.time()
+        for t in range(1, 21):
+            nxt, _, cache = serve(params, cache, nxt[:, None],
+                                  jnp.full((B,), t, jnp.int32))
+        nxt.block_until_ready()
+        per_tok = (time.time() - t0) / 20
+        base[mode] = per_tok
+        csv(f"inference_fig19_decode_{mode}", per_tok * 1e6,
+            f"tokens_per_s={B/per_tok:.0f}")
+    csv("inference_fig19_speedup", 0,
+        f"fal_vs_preln={base['preln']/base['fal']:.3f}")
+
+    # continuous batching engine throughput
+    cfg = cfg0.replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatcher(cfg, params, batch_slots=4, max_seq=256)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, cfg.vocab, 16),
+                           max_new=32))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total = sum(len(r.generated) for r in done)
+    csv("inference_engine_throughput", dt * 1e6,
+        f"requests={len(done)};generated={total};tok_per_s={total/dt:.0f}")

@@ -1,0 +1,57 @@
+"""Paper §3 (Fig 3 / Fig 4): CKA similarity across blocks, gradient magnitude
+of MHA outputs, and per-layer attention-ablation perplexity — measured on a
+briefly-trained small Pre-LN model (the paper used pretrained GPT-2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import analysis
+from repro.data.pipeline import SyntheticMarkov
+from repro.train import trainer
+
+
+def bench(csv, steps=150):
+    cfg = get_config("gpt2-117m").replace(
+        n_layers=6, d_model=192, n_heads=6, n_kv_heads=6, d_ff=768,
+        vocab=1024, max_seq=128, dtype="float32", param_dtype="float32",
+        remat=False, connection="preln", attn_block_q=64, attn_block_k=128)
+    data = SyntheticMarkov(cfg.vocab, 128, 16, seed=23)
+    t0 = time.time()
+    state, _ = trainer.train(cfg, steps=steps, batch=16, seq_len=128,
+                             data=data, log_every=0, lr=1e-3)
+    params = state["params"]
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(10 ** 6).items()}
+
+    # Fig 3(a): CKA of consecutive blocks
+    cka = analysis.cka_table(params, cfg, batch)
+    csv("motivation_fig3a_cka_mlp_in", 0,
+        "avg=%.3f" % (sum(cka["mlp_in"]) / len(cka["mlp_in"])))
+    csv("motivation_fig3a_cka_mha_out", 0,
+        "avg=%.3f" % (sum(cka["mha_out"]) / len(cka["mha_out"])))
+
+    # Fig 4(a): gradient magnitude per block (claim: block 1 the largest)
+    mags = analysis.mha_gradient_magnitudes(params, cfg, batch)
+    rank_of_first = sorted(mags, reverse=True).index(mags[0]) + 1
+    csv("motivation_fig4a_gradmag", (time.time() - t0) * 1e6,
+        "mags=" + "|".join(f"{m:.1f}" for m in mags)
+        + f";first_rank={rank_of_first}")
+
+    # Fig 4(b): per-layer ablation perplexity
+    base = analysis.ablate_attention_perplexity(params, cfg, batch)
+    ppls = [analysis.ablate_attention_perplexity(params, cfg, batch,
+                                                 drop_layer=i)
+            for i in range(cfg.n_layers)]
+    csv("motivation_fig4b_ablation", 0,
+        f"base={base:.2f};drops=" + "|".join(f"{p:.2f}" for p in ppls))
+
+    # Fig 3(b): all-connect vs all-mha removal
+    no_conn = analysis.ablate_attention_perplexity(params, cfg, batch,
+                                                   drop_connections=True)
+    no_mha = analysis.ablate_attention_perplexity(params, cfg, batch,
+                                                  drop_all_mha=True)
+    csv("motivation_fig3b", 0,
+        f"orig={base:.2f};all_connect={no_conn:.2f};all_mha={no_mha:.2f}")

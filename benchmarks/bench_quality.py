@@ -1,0 +1,91 @@
+"""Paper Table 1 / Fig 9 / Apdx D.1: model quality per connection mode at
+small scale on the synthetic Markov corpus (loss ordering is the claim under
+test: fal <= preln < parallel;  falplus <= fal;  ablation1 > preln;
+ablation2 between parallel and fal), plus the Fig 7 quality comparison of
+lossy gradient compression."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticMarkov
+from repro.optim import adamw, grad_compress, schedules
+from repro.train import step as tstep, trainer
+
+
+def _cfg(depth=8):
+    return get_config("gpt2-117m").replace(
+        n_layers=depth, d_model=192, n_heads=6, n_kv_heads=6, d_ff=768,
+        vocab=1024, max_seq=128, dtype="float32", param_dtype="float32",
+        remat=False, attn_block_q=64, attn_block_k=128)
+
+
+def bench(csv, steps=100, depth=6):
+    data = SyntheticMarkov(1024, 128, 8, seed=11)
+    for mode in ("preln", "parallel", "fal", "falplus",
+                 "ablation1", "ablation2"):
+        cfg = _cfg(depth).replace(connection=mode)
+        t0 = time.time()
+        _, hist = trainer.train(cfg, steps=steps, batch=8, seq_len=128,
+                                data=data, log_every=0, lr=1e-3,
+                                schedule="onecycle")
+        # avg of last 3 logged losses for stability
+        final = hist[-1]["loss"] if hist else float("nan")
+        csv(f"quality_tbl1_{mode}_d{depth}",
+            (time.time() - t0) / steps * 1e6,
+            f"final_loss={final:.4f};ppl={jnp.exp(final):.2f}")
+
+
+def bench_compress(csv, steps=80):
+    """Fig 7: Grad-Q / Grad-LR degrade quality; FAL does not (lossless)."""
+    data = SyntheticMarkov(1024, 128, 8, seed=13)
+    cfg0 = _cfg(6)
+
+    for name, transform, mode in (
+            ("baseline", None, "preln"),
+            ("grad_q", grad_compress.quantize_int8, "preln"),
+            ("grad_lr", lambda g: grad_compress.lowrank(g, 4), "preln"),
+            ("fal", None, "fal")):
+        cfg = cfg0.replace(connection=mode)
+        ocfg = adamw.AdamWConfig(lr=schedules.one_cycle(1e-3, steps))
+        state = tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+        loss_fn = tstep.make_loss_fn(cfg)
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        @jax.jit
+        def raw_step(state, batch):
+            (l, _), g = grad_fn(state["params"], batch)
+            return l, g
+
+        @jax.jit
+        def apply(state, g):
+            p, o, gn = adamw.adamw_update(state["params"], g, state["opt"],
+                                          ocfg)
+            return {"params": p, "opt": o}
+
+        t0 = time.time()
+        l = None
+        for i in range(steps):
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            l, g = raw_step(state, b)
+            if transform is not None:
+                g = transform(g)   # models the lossy communication payload
+            state = apply(state, g)
+        csv(f"quality_fig7_{name}", (time.time() - t0) / steps * 1e6,
+            f"final_loss={float(l):.4f}")
+
+
+def bench_depth_scaling(csv, steps=80):
+    """Fig 9: FAL/FAL+ advantage grows with depth."""
+    for depth in (4, 8):
+        data = SyntheticMarkov(1024, 128, 8, seed=17)
+        for mode in ("preln", "fal", "falplus"):
+            cfg = _cfg(depth).replace(connection=mode)
+            _, hist = trainer.train(cfg, steps=steps, batch=8, seq_len=128,
+                                    data=data, log_every=0, lr=1e-3,
+                                    schedule="onecycle")
+            csv(f"quality_fig9_{mode}_L{depth}", 0,
+                f"final_loss={hist[-1]['loss']:.4f}")

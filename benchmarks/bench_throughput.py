@@ -1,0 +1,41 @@
+"""Paper Fig 8: single-device training throughput (tokens/s) per connection
+mode.  On CPU the absolute numbers are not TPU-meaningful, but the relative
+cost of the extra/removed LNs and the dataflow independence are measured
+honestly; the TPU expectation is recorded in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.optim import adamw
+from repro.train import step as tstep
+
+
+def bench(csv, steps=8):
+    cfg0 = get_config("gpt2-117m").replace(
+        n_layers=6, d_model=256, n_heads=8, n_kv_heads=8, d_ff=1024,
+        vocab=2048, max_seq=256, dtype="float32", param_dtype="float32",
+        remat=False, attn_block_q=64, attn_block_k=128)
+    B, S = 8, 256
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                          cfg0.vocab)}
+    base_tps = None
+    for mode in ("preln", "parallel", "fal", "falplus"):
+        cfg = cfg0.replace(connection=mode)
+        ocfg = adamw.AdamWConfig(lr=1e-4)
+        state = tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+        step = jax.jit(tstep.make_train_step(cfg, ocfg), donate_argnums=(0,))
+        state, _ = step(state, batch)  # compile
+        t0 = time.time()
+        for _ in range(steps):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.time() - t0) / steps
+        tps = B * S / dt
+        if mode == "preln":
+            base_tps = tps
+        csv(f"throughput_fig8_{mode}", dt * 1e6,
+            f"tokens_per_s={tps:.0f};speedup_vs_preln={tps/base_tps:.3f}")

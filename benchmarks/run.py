@@ -1,0 +1,59 @@
+"""Benchmark harness — one bench per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+import os
+
+# bench_comm needs a model-axis mesh; everything else is happy with it too.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer training benches")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    def csv(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    from benchmarks import (bench_comm, bench_inference, bench_motivation,
+                            bench_quality, bench_throughput)
+
+    steps = 300 if args.full else 100
+    suites = {
+        "comm": lambda: bench_comm.bench(csv),
+        "throughput": lambda: bench_throughput.bench(csv),
+        "quality": lambda: bench_quality.bench(csv, steps=steps),
+        "quality_compress": lambda: bench_quality.bench_compress(
+            csv, steps=max(steps * 2 // 3, 50)),
+        "quality_depth": lambda: bench_quality.bench_depth_scaling(
+            csv, steps=max(steps * 2 // 3, 50)),
+        "motivation": lambda: bench_motivation.bench(csv, steps=steps),
+        "inference": lambda: bench_inference.bench(csv),
+    }
+    failures = 0
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        print(f"# suite {name}", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,SUITE_FAILED", flush=True)
+        print(f"# suite {name} done in {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

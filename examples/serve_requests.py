@@ -1,0 +1,41 @@
+"""Serving example: continuous-batching engine over a FAL model — submits a
+ragged stream of requests, drains them through fixed batch slots, and
+verifies batched outputs match lone-request decoding.
+
+Run:  PYTHONPATH=src python examples/serve_requests.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.decode import ContinuousBatcher, Request
+
+cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(42)
+
+# --- submit 10 ragged requests through 4 slots -----------------------------
+engine = ContinuousBatcher(cfg, params, batch_slots=4, max_seq=128)
+for i in range(10):
+    engine.submit(Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab, 4 + i % 7),
+                          max_new=8 + 3 * (i % 3)))
+t0 = time.time()
+done = engine.run()
+dt = time.time() - t0
+total = sum(len(r.generated) for r in done)
+print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
+      f"({total/dt:.0f} tok/s)")
+for r in sorted(done, key=lambda r: r.rid)[:3]:
+    print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
+
+# --- correctness: batched == lone ------------------------------------------
+lone = ContinuousBatcher(cfg, params, batch_slots=1, max_seq=128)
+probe = sorted(done, key=lambda r: r.rid)[0]
+lone.submit(Request(rid=0, prompt=probe.prompt, max_new=len(probe.generated)))
+ref = lone.run()[0].generated
+assert ref == probe.generated, (ref, probe.generated)
+print("continuous batching == lone decoding ✓")

@@ -1,0 +1,151 @@
+"""Paper §3 motivation analyses: CKA similarity across blocks and gradient
+magnitude of per-block MHA outputs.
+
+These run on reduced DecoderLM configs with the layer stack *unrolled*
+(params tree-sliced out of the scan stacks) so intermediate activations can
+be captured and perturbed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fal
+from repro.models import blocks as BL
+from repro.models import layers as L
+from repro.models import model as M
+
+
+# ------------------------------------------------------------------------- #
+def linear_cka(x, y):
+    """Linear CKA between feature matrices (n, d1), (n, d2) [Kornblith'19]."""
+    x = x - x.mean(0, keepdims=True)
+    y = y - y.mean(0, keepdims=True)
+    xty = x.T @ y
+    num = jnp.sum(xty * xty)
+    den = jnp.sqrt(jnp.sum((x.T @ x) ** 2)) * jnp.sqrt(jnp.sum((y.T @ y) ** 2))
+    return num / jnp.maximum(den, 1e-12)
+
+
+def _iter_layer_params(params, cfg):
+    """Yield per-layer block params (unstacked) in depth order."""
+    yield params["block0"], BL.window_schedule(cfg)[0], 0
+    i = 1
+    for name in ("blocks_dense", "blocks_moe"):
+        if name in params and params[name] is not None:
+            n = jax.tree.leaves(params[name])[0].shape[0]
+            for j in range(n):
+                pb = jax.tree.map(lambda a: a[j], params[name])
+                yield pb, BL.window_schedule(cfg)[i], i
+                i += 1
+
+
+def collect_block_activations(params, cfg, batch):
+    """Unrolled forward capturing per-block (mha_out, mlp_in, mlp_out, x).
+
+    Returns dict of lists (length n_layers) of (B, S, D) arrays.
+    Dense DecoderLM families only.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = M._embed_tokens(params, cfg, tokens, positions,
+                        batch.get("image_embeds"))
+    rec = {"mha_out": [], "mlp_in": [], "mlp_out": [], "x": []}
+    a1_sig = None
+    for pb, window, idx in _iter_layer_params(params, cfg):
+        h = L.norm_apply(pb["ln1"], x, cfg.norm)
+        from repro.models import attention as A
+        a = A.gqa_apply(pb["attn"], cfg, h, positions, window=window)
+        if idx == 0:
+            mlp_in = fal.block0_mlp_input(cfg, pb, x, a)
+            a1_sig = fal.first_attention_signal(cfg, pb, a)
+        else:
+            mlp_in = fal.mlp_input(cfg, pb, x, a, a1_sig)
+        y = L.mlp_apply(pb["ffn"], mlp_in, cfg.mlp)
+        rec["mha_out"].append(a)
+        rec["mlp_in"].append(mlp_in)
+        rec["mlp_out"].append(y)
+        rec["x"].append(x)
+        x = x + a + y
+    rec["final"] = x
+    return rec
+
+
+def cka_table(params, cfg, batch):
+    """Paper Fig 3(a): CKA similarity of consecutive blocks' MHA outputs,
+    MLP inputs and MLP outputs."""
+    rec = collect_block_activations(params, cfg, batch)
+    out = {"mha_out": [], "mlp_in": [], "mlp_out": []}
+    for k in out:
+        seq = rec[k]
+        for i in range(len(seq) - 1):
+            a = seq[i].reshape(-1, seq[i].shape[-1]).astype(jnp.float32)
+            b = seq[i + 1].reshape(-1, seq[i + 1].shape[-1]).astype(jnp.float32)
+            out[k].append(float(linear_cka(a, b)))
+    return out
+
+
+def mha_gradient_magnitudes(params, cfg, batch):
+    """Paper Fig 4(a): L1 norm of dLoss/d(MHA_i output) per block.
+
+    Implemented by injecting zero perturbations eps_i at every block's MHA
+    output and differentiating wrt them.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    layer_list = list(_iter_layer_params(params, cfg))
+    eps0 = [jnp.zeros((B, S, cfg.d_model)) for _ in layer_list]
+
+    def loss_with_eps(eps):
+        x = M._embed_tokens(params, cfg, tokens, positions,
+                            batch.get("image_embeds"))
+        a1_sig = None
+        from repro.models import attention as A
+        for (pb, window, idx), e in zip(layer_list, eps):
+            h = L.norm_apply(pb["ln1"], x, cfg.norm)
+            a = A.gqa_apply(pb["attn"], cfg, h, positions, window=window) + e
+            if idx == 0:
+                mlp_in = fal.block0_mlp_input(cfg, pb, x, a)
+                a1_sig = fal.first_attention_signal(cfg, pb, a)
+            else:
+                mlp_in = fal.mlp_input(cfg, pb, x, a, a1_sig)
+            y = L.mlp_apply(pb["ffn"], mlp_in, cfg.mlp)
+            x = x + a + y
+        logits = M._logits(params, cfg, x)
+        return M.cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+    grads = jax.grad(loss_with_eps)(eps0)
+    return [float(jnp.sum(jnp.abs(g))) for g in grads]
+
+
+def ablate_attention_perplexity(params, cfg, batch, drop_layer=None,
+                                drop_connections=False, drop_all_mha=False):
+    """Paper Fig 3(b)/4(b): perplexity with MHA layers or MHA->MLP
+    connections removed."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = M._embed_tokens(params, cfg, tokens, positions,
+                        batch.get("image_embeds"))
+    a1_sig = None
+    from repro.models import attention as A
+    for pb, window, idx in _iter_layer_params(params, cfg):
+        h = L.norm_apply(pb["ln1"], x, cfg.norm)
+        a = A.gqa_apply(pb["attn"], cfg, h, positions, window=window)
+        if drop_all_mha or (drop_layer is not None and idx == drop_layer):
+            a = jnp.zeros_like(a)
+        if idx == 0:
+            mlp_in = fal.block0_mlp_input(cfg, pb, x, a)
+            a1_sig = fal.first_attention_signal(cfg, pb, a)
+        else:
+            mlp_in = fal.mlp_input(cfg, pb, x, a, a1_sig)
+        if drop_connections and cfg.connection == "preln":
+            # remove the direct MHA->MLP connection: MLP sees ln2(x) only
+            mlp_in = L.norm_apply(pb["ln2"], x, cfg.norm)
+        y = L.mlp_apply(pb["ffn"], mlp_in, cfg.mlp)
+        x = x + a + y
+    logits = M._logits(params, cfg, x)
+    ce = M.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return float(jnp.exp(ce))

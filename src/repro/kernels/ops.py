@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a CPU host (this container, and the dry-run) Pallas TPU kernels cannot
+lower, so ``use_pallas=False`` (default on CPU) dispatches to the jnp
+blockwise/fused implementations with identical numerics.  On TPU, pass
+``use_pallas=True`` (or set REPRO_USE_PALLAS=1) to run the kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_ln_add as _fla
+from repro.kernels import ref as _ref
+
+
+def _default_use_pallas():
+    if os.environ.get("REPRO_USE_PALLAS"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    use_pallas=None, interpret=False):
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                   block_k=block_k, interpret=interpret)
+    from repro.models.attention import blockwise_attention
+    return blockwise_attention(q, k, v, causal=causal, block_q=block_q)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
+                                             "interpret"))
+def fused_ln_add(x, a1n, scale, bias=None, *, kind="rmsnorm",
+                 use_pallas=None, interpret=False):
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _fla.fused_ln_add(x, a1n, scale, bias, kind=kind,
+                                 interpret=interpret)
+    return _ref.ln_add_ref(x, a1n, scale, bias, kind=kind)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (used by tests + interpret-mode
+validation sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Naive attention oracle.  q: (B,Sq,H,D); k,v: (B,Sk,Hkv,D*)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def ln_add_ref(x, a1n, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return (y + a1n.astype(jnp.float32)).astype(x.dtype)

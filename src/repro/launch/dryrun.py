@@ -1,0 +1,204 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against ShapeDtypeStruct inputs and record memory/cost/collective
+analyses for EXPERIMENTS.md §Dry-run and the §Roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, \
+    shape_applicable
+from repro.launch import mesh as MX
+from repro.launch import specs as SP
+from repro.serve.decode import make_serve_step
+from repro.train import step as tstep
+
+
+def _fsdp_axes(cfg, mesh):
+    # FSDP params over the data axes for every arch (MaxText default);
+    # pure-TP is available via --no-fsdp for the perf ablations.
+    return MX.data_axes_of(mesh)
+
+
+def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
+               extra_overrides=None):
+    """Returns (lowered, compiled, info dict)."""
+    shape_cfg = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    cfg = SP.dryrun_overrides(cfg, shape_cfg)
+    if connection:
+        cfg = cfg.replace(connection=connection)
+    if extra_overrides:
+        cfg = cfg.replace(**extra_overrides)
+    ok, why = shape_applicable(cfg, shape_cfg)
+    if not ok:
+        return None, None, {"skipped": why}
+
+    fax = _fsdp_axes(cfg, mesh) if fsdp else ()
+    parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
+                    "model_axis": MX.MODEL}
+
+    with mesh:
+        if shape_cfg.mode == "train":
+            nmb = SP.num_microbatches(cfg, shape_cfg, mesh)
+            state_sds, batch_sds = SP.train_input_specs(
+                cfg, shape_cfg, mesh, fax)
+            gshard = jax.tree.map(lambda s: s.sharding, state_sds["params"])
+            step = tstep.make_train_step(cfg, SP.opt_cfg_for(cfg),
+                                         parallel_ctx, nmb,
+                                         grad_shardings=gshard)
+            out_sh = jax.tree.map(lambda s: s.sharding, state_sds)
+            lowered = jax.jit(
+                step, out_shardings=(out_sh, None)).lower(state_sds, batch_sds)
+        else:
+            # prefill lowers the forward pass; decode lowers serve_step
+            if shape_cfg.mode == "prefill":
+                from repro.models import model as M
+
+                def prefill(params, batch):
+                    logits, aux, _ = M.forward(params, cfg, batch, "prefill",
+                                               parallel_ctx)
+                    return logits
+
+                params_sds, _, _, _ = SP.decode_input_specs(
+                    cfg, shape_cfg, mesh, fax)
+                batch_sds = SP.batch_struct(cfg, shape_cfg, mesh)
+                lowered = jax.jit(prefill).lower(params_sds, batch_sds)
+            else:
+                serve = make_serve_step(cfg, parallel_ctx)
+                params_sds, cache_sds, tok, pos = SP.decode_input_specs(
+                    cfg, shape_cfg, mesh, fax)
+                cache_sh = jax.tree.map(lambda s: s.sharding, cache_sds)
+                lowered = jax.jit(
+                    serve, out_shardings=(None, None, cache_sh)).lower(
+                    params_sds, cache_sds, tok, pos)
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    info = {
+        "arch": arch, "shape": shape_name,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "connection": cfg.connection, "fsdp": bool(fax),
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops": cost.get("flops"),
+                 "bytes": cost.get("bytes accessed")},
+    }
+    return lowered, compiled, info
+
+
+def run_one(arch, shape_name, mesh_kind, out_dir=None, connection=None,
+            fsdp=True, save_hlo=True, extra_overrides=None, tag_suffix=""):
+    mesh = MX.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        lowered, compiled, info = lower_pair(arch, shape_name, mesh,
+                                             connection=connection, fsdp=fsdp,
+                                             extra_overrides=extra_overrides)
+    except Exception as e:  # noqa
+        info = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+        lowered = compiled = None
+    info["mesh_kind"] = mesh_kind
+    if out_dir and compiled is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_kind}"
+        if connection:
+            tag += f"_{connection}"
+        if tag_suffix:
+            tag += f"_{tag_suffix}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(info, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                f.write(compiled.as_text())
+    return info, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--connection", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="config override key=value (repeatable), e.g. "
+                         "--set attn_shard=sequence --set route_groups=16")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.overrides:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+            v = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            pass
+        overrides[k] = v
+
+    archs = [a for a in ARCH_IDS if not a.startswith("gpt2")] \
+        if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                t0 = time.time()
+                info, compiled = run_one(arch, shape, mk, args.out,
+                                         connection=args.connection,
+                                         fsdp=not args.no_fsdp,
+                                         save_hlo=not args.no_hlo,
+                                         extra_overrides=overrides or None,
+                                         tag_suffix="_".join(
+                                             f"{k}-{v}" for k, v in
+                                             overrides.items())[:40])
+                if "skipped" in info:
+                    print(f"SKIP  {arch:24s} {shape:12s} {mk}: "
+                          f"{info['skipped']}", flush=True)
+                elif "error" in info:
+                    print(f"FAIL  {arch:24s} {shape:12s} {mk}: "
+                          f"{info['error']}", flush=True)
+                else:
+                    mem = info["memory"]
+                    per_dev = (mem["argument_bytes"] or 0) / 2**30
+                    print(f"OK    {arch:24s} {shape:12s} {mk} "
+                          f"compile={info['compile_s']}s "
+                          f"args/dev={per_dev:.2f}GiB "
+                          f"temp/dev={(mem['temp_bytes'] or 0)/2**30:.2f}GiB "
+                          f"flops={info['cost']['flops']:.3g}",
+                          flush=True)
+                if compiled is not None:
+                    del compiled
+
+
+if __name__ == "__main__":
+    main()

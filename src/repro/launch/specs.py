@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  This is what the multi-pod dry-run lowers
+against."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as MX
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import step as tstep
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def dryrun_overrides(cfg, shape_cfg):
+    """Numerics/memory policy for full-scale dry runs (DESIGN.md §4/§7)."""
+    over = dict(dtype="bfloat16")
+    if cfg.arch_id.startswith("deepseek"):
+        # 671B: bf16 params + bf16 adam moments (or nothing fits anywhere)
+        over.update(param_dtype="bfloat16")
+    else:
+        over.update(param_dtype="float32")
+    return cfg.replace(**over)
+
+
+def opt_cfg_for(cfg):
+    return adamw.AdamWConfig(
+        lr=1e-4,
+        state_dtype="bfloat16" if cfg.arch_id.startswith("deepseek")
+        else "float32")
+
+
+def num_microbatches(cfg, shape_cfg, mesh):
+    if shape_cfg.mode != "train":
+        return 1
+    if os.environ.get("REPRO_MICROBATCHES"):
+        return int(os.environ["REPRO_MICROBATCHES"])
+    big = cfg.n_experts > 0 or cfg.d_model >= 4096
+    n = 8 if big else 4
+    # microbatch size must still cover the batch shards
+    shards = int(np.prod([mesh.shape[a] for a in MX.data_axes_of(mesh)]))
+    while shape_cfg.global_batch // n < shards and n > 1:
+        n //= 2
+    return n
+
+
+def batch_struct(cfg, shape_cfg, mesh):
+    """Abstract input batch for the given shape."""
+    dspec = P(MX.data_axes_of(mesh))
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    sh = lambda spec: NamedSharding(mesh, spec)
+    out = {"tokens": jax.ShapeDtypeStruct(
+        (B, S), jnp.int32, sharding=sh(P(*dspec, None)))}
+    if cfg.family == "vlm" and shape_cfg.mode != "decode":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=sh(P(*dspec, None, None)))
+    if cfg.family == "audio" and shape_cfg.mode != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_enc_frames, cfg.d_model), jnp.bfloat16,
+            sharding=sh(P(*dspec, None, None)))
+    return out
+
+
+def train_input_specs(cfg, shape_cfg, mesh, fsdp_axes=()):
+    """(state_sds, batch_sds) for jit(train_step).lower."""
+    ocfg = opt_cfg_for(cfg)
+    state_shape = jax.eval_shape(
+        lambda: tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg))
+    specs = MX.state_specs(state_shape, cfg, fsdp_axes)
+    shardings = MX.shardings_for(mesh, specs)
+    state_sds = _sds(state_shape, shardings)
+    return state_sds, batch_struct(cfg, shape_cfg, mesh)
+
+
+def decode_input_specs(cfg, shape_cfg, mesh, fsdp_axes=()):
+    """(params_sds, cache_sds, tokens_sds, pos_sds) for serve_step.lower."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = MX.param_specs(params_shape, cfg, fsdp_axes)
+    params_sds = _sds(params_shape, MX.shardings_for(mesh, pspecs))
+
+    cache_shape = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, "bfloat16"))
+    cspec_fn = MX.cache_specs(cfg, mesh, B)
+    cspecs = cspec_fn(cache_shape)
+    cache_sds = _sds(cache_shape, MX.shardings_for(mesh, cspecs))
+
+    dax = MX.data_axes_of(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+    bspec = P(dax) if B % dsize == 0 else P()
+    sh = NamedSharding(mesh, bspec)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                  sharding=NamedSharding(mesh, P(*bspec, None)))
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=sh)
+    return params_sds, cache_sds, tokens, pos

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+Local (this container, 1 CPU device):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --reduced --steps 100 --batch 8 --seq 128 --connection fal
+
+Production (TPU pod / forced host devices): add --mesh single|multi to run
+the real sharded train step (the same code path the dry-run lowers).
+"""
+import os
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-117m")
+    ap.add_argument("--connection", default=None,
+                    help="preln|parallel|fal|falplus (default: config's)")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "onecycle", "wsd"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mesh:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=512")
+
+    import jax
+    from repro.configs.base import get_config
+    from repro.launch import mesh as MX
+    from repro.train import trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.connection:
+        cfg = cfg.replace(connection=args.connection)
+
+    parallel_ctx = None
+    in_shardings = None
+    if args.mesh:
+        mesh = MX.make_production_mesh(multi_pod=(args.mesh == "multi"))
+        parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
+                        "model_axis": MX.MODEL}
+
+    print(f"training {cfg.arch_id} connection={cfg.connection} "
+          f"layers={cfg.n_layers} d={cfg.d_model}", flush=True)
+    state, hist = trainer.train(
+        cfg, steps=args.steps, batch=args.batch, seq_len=args.seq,
+        lr=args.lr, seed=args.seed, parallel_ctx=parallel_ctx,
+        num_microbatches=args.microbatches, schedule=args.schedule,
+        ckpt_dir=args.ckpt)
+    print(f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

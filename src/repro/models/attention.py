@@ -1,0 +1,312 @@
+"""Attention: GQA (+qk_norm, sliding window, logit softcap), MLA (DeepSeek),
+blockwise flash-style jnp implementation, and KV-cache decode paths.
+
+The blockwise implementation is the dry-run/compile path (Pallas kernels do
+not lower on the CPU host backend); the Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same online-softmax algorithm
+and is validated against ``ref.py`` in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------------- #
+# core blockwise attention (training / prefill)
+# ------------------------------------------------------------------------- #
+def blockwise_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                        block_q=512, scale=None, q_offset=0):
+    """Flash-style attention, scanning over query blocks.
+
+    q: (B, Sq, H, Dh)   k: (B, Sk, Hkv, Dh)   v: (B, Sk, Hkv, Dv)
+    Memory: O(block_q * Sk) scores instead of O(Sq * Sk).
+    ``q_offset``: position of q[0] within the key sequence (cross-attention /
+    chunked prefill).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    Dv = v.shape[-1]
+    scale = Dh ** -0.5 if scale is None else scale
+
+    bq = min(block_q, Sq)
+    pad = (-Sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = q.shape[1] // bq
+    qb = q.reshape(B, nblk, bq, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    k_pos = jnp.arange(Sk)
+
+    def one_block(i, qblk):
+        # qblk: (B, bq, Hkv, G, Dh)
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = L.softcap(s, cap)
+        mask = jnp.ones((bq, Sk), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if not (isinstance(window, int) and window == 0):
+            # ``window`` may be a traced per-layer scalar (scan over layers);
+            # window <= 0 disables the mask.
+            w = jnp.asarray(window)
+            mask &= (k_pos[None, :] > q_pos[:, None] - w) | (w <= 0)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+        return o  # (B, bq, Hkv, G, Dv)
+
+    out = jax.lax.map(lambda args: one_block(*args),
+                      (jnp.arange(nblk), qb))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nblk * bq, H, Dv)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, cap=0.0,
+                     scale=None):
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, Hkv, D*); pos: (B,) int32 index of the
+    current token (keys at indices <= pos are valid).
+    """
+    B, _, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = L.softcap(s, cap)
+    k_pos = jnp.arange(S)[None]                        # (1, S)
+    mask = k_pos <= pos[:, None]
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window)
+        mask &= (k_pos > (pos[:, None] - w)) | (w <= 0)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, v_cache.shape[-1])
+
+
+# ------------------------------------------------------------------------- #
+# GQA module
+# ------------------------------------------------------------------------- #
+def gqa_init(key, cfg, cross=False):
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], d, H * Dh, cfg.param_dtype)["w"],
+        "wk": L.dense_init(ks[1], d, Hkv * Dh, cfg.param_dtype)["w"],
+        "wv": L.dense_init(ks[2], d, Hkv * Dh, cfg.param_dtype)["w"],
+        "wo": L.dense_init(ks[3], H * Dh, d, cfg.param_dtype,
+                           scale=1.0 / np.sqrt(H * Dh * 2 * cfg.n_layers))["w"],
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = L.norm_init(Dh, "rmsnorm", cfg.param_dtype)
+        p["knorm"] = L.norm_init(Dh, "rmsnorm", cfg.param_dtype)
+    return p
+
+
+def gqa_qkv(p, cfg, x, positions, kv_x=None, rope=True):
+    """Project to q,k,v (with qk_norm + rope)."""
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S = x.shape[:2]
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (kv_x @ p["wk"].astype(x.dtype)).reshape(B, Skv, Hkv, Dh)
+    v = (kv_x @ p["wv"].astype(x.dtype)).reshape(B, Skv, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.norm_apply(p["qnorm"], q)
+        k = L.norm_apply(p["knorm"], k)
+    if cfg.rope and rope and positions is not None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sequence_parallel_attention(q, k, v, cfg, pctx, *, causal=True,
+                                window=0):
+    """Context-parallel attention (beyond-paper, EXPERIMENTS.md §Perf P1).
+
+    q is sharded on the sequence dim over the ``model`` axis; K/V are
+    gathered (jit inserts the all-gather at the shard_map boundary).  Each
+    shard runs blockwise attention over its local q rows with the correct
+    global ``q_offset`` for causal/window masks.  Removes the score-matmul
+    all-reduces GSPMD emits when kv-heads don't divide the model axis.
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh, dax, max_ = pctx["mesh"], pctx["data_axes"], pctx["model_axis"]
+    M = mesh.shape[max_]
+    S = q.shape[1]
+    assert S % M == 0, (S, M)
+
+    def local(q_loc, k_full, v_full, w):
+        off = jax.lax.axis_index(max_) * (S // M)
+        return blockwise_attention(
+            q_loc, k_full, v_full, causal=causal, window=w,
+            cap=cfg.attn_softcap, block_q=min(cfg.attn_block_q, S // M),
+            q_offset=off)
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(dax, max_, None, None),
+                                 P(dax, None, None, None),
+                                 P(dax, None, None, None), P()),
+                       out_specs=P(dax, max_, None, None),
+                       check_vma=False)
+    # window may be a traced per-layer scalar (scan xs) — pass explicitly
+    return fn(q, k, v, jnp.asarray(window, jnp.int32))
+
+
+def _use_seq_parallel(cfg, pctx, S):
+    if cfg.attn_shard != "sequence" or not pctx or pctx.get("mesh") is None:
+        return False
+    return S % pctx["mesh"].shape[pctx["model_axis"]] == 0
+
+
+def gqa_apply(p, cfg, x, positions, *, window=0, causal=True, pctx=None):
+    """Full-sequence attention (train / prefill). Returns (B,S,D)."""
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    B, S = x.shape[:2]
+    if _use_seq_parallel(cfg, pctx, S):
+        o = sequence_parallel_attention(q, k, v, cfg, pctx, causal=causal,
+                                        window=window)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                cap=cfg.attn_softcap, block_q=cfg.attn_block_q)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def gqa_cross_apply(p, cfg, x, enc_out):
+    """Cross-attention (whisper decoder): no causal mask, no rope."""
+    q, k, v = gqa_qkv(p, cfg, x, None, kv_x=enc_out, rope=False)
+    o = blockwise_attention(q, k, v, causal=False, cap=0.0,
+                            block_q=cfg.attn_block_q)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def gqa_init_cache(cfg, batch, seq, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, seq, Hkv, Dh), jnp.dtype(dtype)),
+        "v": jnp.zeros((batch, seq, Hkv, Dh), jnp.dtype(dtype)),
+    }
+
+
+def gqa_decode(p, cfg, x, cache, pos, *, window=0):
+    """One-step decode. x: (B,1,D); pos: (B,) current position. Returns
+    (out, new_cache)."""
+    B = x.shape[0]
+    q, k, v = gqa_qkv(p, cfg, x, pos[:, None].astype(jnp.int32))
+    upd = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))
+    kc = upd(cache["k"], k.astype(cache["k"].dtype), pos)
+    vc = upd(cache["v"], v.astype(cache["v"].dtype), pos)
+    o = decode_attention(q, kc, vc, pos, window=window, cap=cfg.attn_softcap)
+    out = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, {"k": kc, "v": vc}
+
+
+# ------------------------------------------------------------------------- #
+# MLA (DeepSeek-V3 Multi-head Latent Attention)
+# ------------------------------------------------------------------------- #
+def mla_init(key, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dq": L.dense_init(ks[0], d, rq, cfg.param_dtype)["w"],
+        "q_norm": L.norm_init(rq, "rmsnorm", cfg.param_dtype),
+        "w_uq": L.dense_init(ks[1], rq, H * (dn + dr), cfg.param_dtype)["w"],
+        "w_dkv": L.dense_init(ks[2], d, rkv, cfg.param_dtype)["w"],
+        "kv_norm": L.norm_init(rkv, "rmsnorm", cfg.param_dtype),
+        "w_kr": L.dense_init(ks[3], d, dr, cfg.param_dtype)["w"],
+        "w_uk": L.dense_init(ks[4], rkv, H * dn, cfg.param_dtype)["w"],
+        "w_uv": L.dense_init(ks[5], rkv, H * dv, cfg.param_dtype)["w"],
+        "wo": L.dense_init(ks[6], H * dv, d, cfg.param_dtype,
+                           scale=1.0 / np.sqrt(H * dv * 2 * cfg.n_layers))["w"],
+    }
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    B, S = x.shape[:2]
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = L.norm_apply(p["q_norm"], x @ p["w_dq"].astype(x.dtype))
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x, positions):
+    c = L.norm_apply(p["kv_norm"], x @ p["w_dkv"].astype(x.dtype))
+    kr = x @ p["w_kr"].astype(x.dtype)                       # (B,S,dr), shared head
+    kr = L.apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, kr
+
+
+def mla_apply(p, cfg, x, positions, pctx=None):
+    """Full-sequence MLA (train / prefill): expand k,v; blockwise attention."""
+    B, S = x.shape[:2]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c, kr = _mla_ckv(p, cfg, x, positions)
+    k_nope = (c @ p["w_uk"].astype(x.dtype)).reshape(B, S, H, dn)
+    v = (c @ p["w_uv"].astype(x.dtype)).reshape(B, S, H, dv)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                                  (B, S, H, dr))], -1)
+    scale = (dn + dr) ** -0.5
+    if _use_seq_parallel(cfg, pctx, S):
+        # note: v head dim != qk head dim is fine (shard_map is shape-blind)
+        o = sequence_parallel_attention(q, k, v, cfg, pctx, causal=True)
+    else:
+        o = blockwise_attention(q, k, v, causal=True, scale=scale,
+                                block_q=cfg.attn_block_q)
+    return o.reshape(B, S, H * dv) @ p["wo"].astype(x.dtype)
+
+
+def mla_init_cache(cfg, batch, seq, dtype):
+    return {
+        "c": jnp.zeros((batch, seq, cfg.kv_lora_rank), jnp.dtype(dtype)),
+        "kr": jnp.zeros((batch, seq, cfg.qk_rope_head_dim), jnp.dtype(dtype)),
+    }
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Absorbed-matrix MLA decode: attention in the compressed latent space.
+    Cache holds only (c, k_rope) per token — the reason long_500k is feasible.
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    positions = pos[:, None].astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)            # (B,1,H,dn/dr)
+    c, kr = _mla_ckv(p, cfg, x, positions)                   # (B,1,rkv), (B,1,dr)
+    upd = jax.vmap(lambda cc, u, i: jax.lax.dynamic_update_slice_in_dim(cc, u, i, 0))
+    cc = upd(cache["c"], c.astype(cache["c"].dtype), pos)
+    krc = upd(cache["kr"], kr.astype(cache["kr"].dtype), pos)
+    # absorb W_uk into q:  q_lat[h] = q_nope[h] @ W_uk[:, h, :].T
+    w_uk = p["w_uk"].astype(x.dtype).reshape(rkv, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)   # (B,H,rkv)
+    s = jnp.einsum("bhr,bkr->bhk", q_lat, cc,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bhd,bkd->bhk", q_rope[:, 0], krc,
+                    preferred_element_type=jnp.float32)
+    s *= (dn + dr) ** -0.5
+    mask = jnp.arange(cc.shape[1])[None] <= pos[:, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", pattn.astype(cc.dtype), cc)  # (B,H,rkv)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(rkv, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv).reshape(B, 1, H * dv)
+    return o @ p["wo"].astype(x.dtype), {"c": cc, "kr": krc}

@@ -1,0 +1,111 @@
+"""Transformer block assembly honoring the FAL connection modes (core/fal.py).
+
+A block is:  x + MHA(ln1(x)) + FFN(mlp_input)   with optional gemma2-style
+post-norms, MoE FFN, MLA attention, and cross-attention (whisper decoder).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fal
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+def block_init(key, cfg, *, kind="dense", cross=False, is_block0=False):
+    """kind: 'dense' (cfg.mlp FFN) | 'moe'.  cross adds cross-attention."""
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {"ln1": L.norm_init(d, cfg.norm, cfg.param_dtype),
+         "ln2": L.norm_init(d, cfg.norm, cfg.param_dtype)}
+    p["attn"] = (A.mla_init(ks[0], cfg) if cfg.use_mla
+                 else A.gqa_init(ks[0], cfg))
+    if cross:
+        p["ln_x"] = L.norm_init(d, cfg.norm, cfg.param_dtype)
+        p["xattn"] = A.gqa_init(ks[1], cfg, cross=True)
+    if kind == "moe":
+        p["ffn"] = M.moe_init(ks[2], cfg)
+    else:
+        d_ff = cfg.dense_d_ff or cfg.d_ff
+        p["ffn"] = L.mlp_init(ks[2], d, d_ff, cfg.mlp, cfg.param_dtype)
+    if cfg.connection in fal.NEEDS_LN_FAL and (
+            not is_block0 or cfg.connection == "ablation1"):
+        # ablation1 normalises each block's OWN attention — block 0 included
+        p["ln_fal"] = L.norm_init(d, cfg.norm, cfg.param_dtype)
+    if is_block0 and cfg.connection == "fal":
+        p["ln_a"] = L.norm_init(d, cfg.norm, cfg.param_dtype)  # footnote 3
+    if cfg.post_norms:
+        p["post_attn"] = L.norm_init(d, cfg.norm, cfg.param_dtype)
+        p["post_ffn"] = L.norm_init(d, cfg.norm, cfg.param_dtype)
+    return p
+
+
+def _ffn_apply(p, cfg, h, kind, parallel_ctx, mode):
+    """Returns (y, aux)."""
+    if kind == "moe":
+        if (parallel_ctx is not None and mode == "train"
+                and parallel_ctx.get("mesh") is not None):
+            fn = (M.moe_apply_shard_slot if cfg.route_groups
+                  else M.moe_apply_sharded)
+            return fn(p["ffn"], cfg, h,
+                      parallel_ctx["mesh"],
+                      parallel_ctx["data_axes"],
+                      parallel_ctx["model_axis"])
+        return M.moe_apply(p["ffn"], cfg, h)
+    return L.mlp_apply(p["ffn"], h, cfg.mlp), jnp.zeros((), jnp.float32)
+
+
+def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
+                is_block0=False, parallel_ctx=None, mode="train",
+                enc_out=None, cache=None, pos=None, causal=True):
+    """One block, full-sequence (train/prefill) or single-token decode.
+
+    Returns (x_out, a_raw, aux, new_cache).  ``a_raw`` is this block's MHA
+    output (block 0 exports it as the first-attention signal).
+    """
+    h = L.norm_apply(p["ln1"], x, cfg.norm)
+    new_cache = None
+    if mode == "decode":
+        if cfg.use_mla:
+            a, new_cache = A.mla_decode(p["attn"], cfg, h, cache, pos)
+        else:
+            a, new_cache = A.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                        window=window)
+    else:
+        if cfg.use_mla:
+            a = A.mla_apply(p["attn"], cfg, h, positions,
+                            pctx=parallel_ctx)
+        else:
+            a = A.gqa_apply(p["attn"], cfg, h, positions, window=window,
+                            causal=causal, pctx=parallel_ctx)
+    if cfg.post_norms:
+        a = L.norm_apply(p["post_attn"], a, cfg.norm)
+
+    resid = x + a
+
+    if "xattn" in p:  # whisper decoder cross-attention
+        cx = A.gqa_cross_apply(p["xattn"], cfg,
+                               L.norm_apply(p["ln_x"], resid, cfg.norm),
+                               enc_out)
+        resid = resid + cx
+        x = x + cx  # the FAL mlp_input uses x without self-attn but with cross
+
+    if is_block0:
+        mlp_in = fal.block0_mlp_input(cfg, p, x, a)
+    else:
+        mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
+
+    y, aux = _ffn_apply(p, cfg, mlp_in, kind, parallel_ctx, mode)
+    if cfg.post_norms:
+        y = L.norm_apply(p["post_ffn"], y, cfg.norm)
+    return resid + y, a, aux, new_cache
+
+
+def window_schedule(cfg, n_layers=None):
+    """Per-layer sliding windows.  gemma2: alternate local/global."""
+    n = n_layers or cfg.n_layers
+    if cfg.layer_pattern == "local_global" and cfg.sliding_window:
+        return [cfg.sliding_window if i % 2 == 0 else 0 for i in range(n)]
+    return [cfg.sliding_window] * n

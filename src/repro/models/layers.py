@@ -1,0 +1,113 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings, softcap.
+
+Pure-functional style: ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y``.  Params are plain dict pytrees so they can
+be stacked with vmap for lax.scan-over-layers and mirrored by PartitionSpec
+trees (see launch/mesh.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name):
+    return jnp.dtype(name)
+
+
+# ----------------------------------------------------------------- norms ----
+def norm_init(d, kind="rmsnorm", dtype="float32"):
+    p = {"scale": jnp.ones((d,), _dtype(dtype))}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(dtype))
+    return p
+
+
+def norm_apply(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ----
+def rope_freqs(head_dim, theta=10000.0):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    return jnp.asarray(inv)  # (half,)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D) ; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, half)
+    ang = ang[..., None, :]  # (..., S, 1, half) broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- softcap ----
+def softcap(x, cap):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------- linear ----
+def dense_init(key, d_in, d_out, dtype="float32", scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), _dtype(dtype)) * scale
+    return {"w": w}
+
+
+def dense_apply(p, x):
+    return x @ p["w"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- mlp ----
+def mlp_init(key, d, d_ff, kind="swiglu", dtype="float32", out_scale=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {}
+    if kind in ("swiglu", "geglu"):
+        p["wi"] = dense_init(k1, d, d_ff, dtype)["w"]
+        p["wg"] = dense_init(k2, d, d_ff, dtype)["w"]
+    else:  # gelu
+        p["wi"] = dense_init(k1, d, d_ff, dtype)["w"]
+    p["wo"] = dense_init(k3, d_ff, d, dtype, scale=out_scale or 1.0 / np.sqrt(d_ff))["w"]
+    return p
+
+
+def mlp_apply(p, x, kind="swiglu"):
+    w_i = p["wi"].astype(x.dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ w_i)
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype)) * (x @ w_i)
+    else:
+        h = jax.nn.gelu(x @ w_i)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# -------------------------------------------------------------- embedding ----
+def embed_init(key, vocab, d, dtype="float32"):
+    return {"emb": jax.random.normal(key, (vocab, d), _dtype(dtype)) * 0.02}
+
+
+def embed_apply(p, tokens, dtype):
+    return p["emb"].astype(_dtype(dtype))[tokens]
+
+
+def unembed_apply(p, x, final_cap=0.0):
+    logits = x @ p["emb"].astype(x.dtype).T
+    return softcap(logits, final_cap)

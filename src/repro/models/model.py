@@ -1,0 +1,650 @@
+"""Top-level models: DecoderLM (dense/moe/vlm), MambaLM (ssm), ZambaLM
+(hybrid), Whisper (audio enc-dec).
+
+Uniform functional API:
+    init_params(key, cfg)                       -> params
+    forward(params, cfg, batch, mode, ...)      -> (logits, aux) | (logits, cache)
+    loss_fn(params, cfg, batch, parallel_ctx)   -> (loss, metrics)
+    init_cache(cfg, batch, seq, dtype)          -> decode cache pytree
+
+Layer stacks run under ``jax.lax.scan`` over stacked params (bounded HLO for
+61-layer models); blocks are ``jax.checkpoint``-ed when cfg.remat.  The FAL
+first-attention signal is produced by the unscanned block 0 and closed over
+by the scan body (a scan-carried constant — zero recompute, DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fal
+from repro.models import attention as A
+from repro.models import blocks as BL
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------------------- #
+# helpers
+# ------------------------------------------------------------------------- #
+def _stack_init(key, n, init_fn):
+    if n == 0:
+        return None
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _layer_kind(cfg, i):
+    if cfg.n_experts and i >= cfg.first_dense_layers:
+        return "moe"
+    return "dense"
+
+
+def cross_entropy(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+# ------------------------------------------------------------------------- #
+# DecoderLM: dense / moe / vlm
+# ------------------------------------------------------------------------- #
+def _decoder_init(key, cfg):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                               cfg.param_dtype)}
+    if cfg.learned_pos:
+        p["pos_emb"] = jax.random.normal(
+            ks[1], (cfg.max_seq, cfg.d_model), jnp.dtype(cfg.param_dtype)) * 0.02
+    p["block0"] = BL.block_init(ks[2], cfg, kind=_layer_kind(cfg, 0),
+                                is_block0=True)
+    n_rest = cfg.n_layers - 1
+    fd = max(cfg.first_dense_layers - 1, 0) if cfg.n_experts else n_rest
+    n_moe = n_rest - fd if cfg.n_experts else 0
+    if fd:
+        p["blocks_dense"] = _stack_init(
+            ks[3], fd, lambda k: BL.block_init(k, cfg, kind="dense"))
+    if n_moe:
+        p["blocks_moe"] = _stack_init(
+            ks[4], n_moe, lambda k: BL.block_init(k, cfg, kind="moe"))
+    p["final_norm"] = L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(ks[5], cfg.d_model, cfg.vocab, cfg.param_dtype)
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": L.dense_init(ks[6], 2 * cfg.d_model, cfg.d_model,
+                                 cfg.param_dtype),
+            "norm_h": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+            "norm_e": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+            # the MTP head block is a plain preln block (it sits outside the
+            # main depth, so FAL's first-attention rewiring does not apply)
+            "block": BL.block_init(ks[7], cfg.replace(connection="preln"),
+                                   kind="dense"),
+        }
+    return p
+
+
+def constrain_batch(x, parallel_ctx):
+    """Pin activations to batch-over-data sharding (GSPMD anchor after the
+    vocab-sharded embedding gather)."""
+    if not parallel_ctx or parallel_ctx.get("mesh") is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = parallel_ctx["mesh"]
+    spec = P(parallel_ctx["data_axes"], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _embed_tokens(p, cfg, tokens, positions, image_embeds=None):
+    x = L.embed_apply(p["embed"], tokens, cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if cfg.learned_pos:
+        x = x + p["pos_emb"].astype(x.dtype)[positions]
+    if image_embeds is not None and cfg.n_image_tokens:
+        n = cfg.n_image_tokens
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x[:, n:]], axis=1)
+    return x
+
+
+def _logits(p, cfg, x):
+    x = L.norm_apply(p["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        return L.unembed_apply(p["embed"], x, cfg.final_softcap)
+    return L.softcap(L.dense_apply(p["head"], x), cfg.final_softcap)
+
+
+def _run_stack(p_stack, cfg, x, a1_sig, positions, windows, kind,
+               parallel_ctx, mode):
+    """Scan blocks over stacked params.  Returns (x, aux_sum)."""
+    def body(carry, xs):
+        h, aux = carry
+        pb, w = xs
+        h, _, aux_i, _ = BL.block_apply(
+            pb, cfg, h, a1_sig, positions, w, kind=kind,
+            parallel_ctx=parallel_ctx, mode=mode)
+        return (h, aux + aux_i), None
+
+    body = _maybe_remat(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (p_stack, windows))
+    return x, aux
+
+
+def _decoder_forward(p, cfg, batch, mode, parallel_ctx=None,
+                     want="logits"):
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    x = _embed_tokens(p, cfg, tokens, positions,
+                      batch.get("image_embeds"))
+    x = constrain_batch(x, parallel_ctx)
+    wsched = BL.window_schedule(cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    # block 0 sits outside the layer scan; without its own remat its
+    # attention residuals (probs etc.) are stashed for backward
+    # (EXPERIMENTS.md §Perf D2)
+    block0 = _maybe_remat(
+        lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, wsched[0],
+                                     kind=_layer_kind(cfg, 0), is_block0=True,
+                                     parallel_ctx=parallel_ctx, mode=mode),
+        cfg)
+    x, a1_raw, aux0, _ = block0(p["block0"], x)
+    aux += aux0
+    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+
+    i = 1
+    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
+        if name in p and p[name] is not None:
+            n = jax.tree.leaves(p[name])[0].shape[0]
+            ws = jnp.asarray(wsched[i:i + n], jnp.int32)
+            x, aux_s = _run_stack(p[name], cfg, x, a1_sig, positions, ws,
+                                  kind, parallel_ctx, mode)
+            aux += aux_s
+            i += n
+
+    if want == "hidden":
+        return None, aux, {"hidden": x}
+    logits = _logits(p, cfg, x)
+    extras = {"hidden": x} if cfg.mtp_depth else {}
+    return logits, aux, extras
+
+
+def _decoder_init_cache(p, cfg, batch, seq, dtype):
+    B = batch
+    mk = (A.mla_init_cache if cfg.use_mla else A.gqa_init_cache)
+    c0 = mk(cfg, B, seq, dtype)
+    rest = cfg.n_layers - 1
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (rest,) + a.shape), c0)
+    return {"block0": c0, "blocks": stacked}
+
+
+def _decoder_decode(p, cfg, batch, cache, parallel_ctx=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    B = tokens.shape[0]
+    positions = pos[:, None]
+    x = _embed_tokens(p, cfg, tokens, positions)
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        # VLM: while decoding through the image prefix the serving engine
+        # passes the precomputed patch embedding for the current position
+        x = jnp.where((pos < cfg.n_image_tokens)[:, None, None],
+                      batch["image_embeds"].astype(x.dtype), x)
+    wsched = BL.window_schedule(cfg)
+
+    x, a1_raw, _, c0 = BL.block_apply(
+        p["block0"], cfg, x, None, positions, wsched[0],
+        kind=_layer_kind(cfg, 0), is_block0=True, mode="decode",
+        cache=cache["block0"], pos=pos, parallel_ctx=parallel_ctx)
+    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+
+    # single stacked scan over remaining layers (dense+moe kinds share
+    # attention caches; the ffn kind switch is static per segment)
+    new_caches = {"block0": c0}
+    ws_all = jnp.asarray(wsched[1:], jnp.int32)
+    i = 0
+    seg_caches = []
+    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
+        if name in p and p[name] is not None:
+            n = jax.tree.leaves(p[name])[0].shape[0]
+            ws = jax.lax.slice_in_dim(ws_all, i, i + n)
+            cache_seg = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, i, i + n), cache["blocks"])
+
+            def body(h, xs, kind=kind):
+                pb, w, ci = xs
+                h, _, _, c_new = BL.block_apply(
+                    pb, cfg, h, a1_sig, None, w, kind=kind, mode="decode",
+                    cache=ci, pos=pos, parallel_ctx=parallel_ctx)
+                return h, c_new
+
+            x, cseg = jax.lax.scan(body, x, (p[name], ws, cache_seg))
+            seg_caches.append(cseg)
+            i += n
+    new_caches["blocks"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, 0), *seg_caches)
+    logits = _logits(p, cfg, x)
+    return logits, new_caches
+
+
+# ------------------------------------------------------------------------- #
+# MambaLM (ssm)
+# ------------------------------------------------------------------------- #
+def _mamba_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+            "mixer": S.mamba_init(k2, cfg)}
+
+
+def _mamba_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "blocks": _stack_init(ks[1], cfg.n_layers,
+                              lambda k: _mamba_block_init(k, cfg)),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+    }
+
+
+def _mamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
+    x = L.embed_apply(p["embed"], batch["tokens"], cfg.dtype)
+    x = constrain_batch(x, parallel_ctx)
+
+    def body(h, pb):
+        # pin the mixer input/output to batch-over-data sharding: without
+        # the anchor GSPMD auto-spreads the SSD einsums over the idle
+        # `model` axis and pays reshard collectives every layer
+        # (EXPERIMENTS.md §Perf M1)
+        h_in = constrain_batch(L.norm_apply(pb["ln"], h, cfg.norm),
+                               parallel_ctx)
+        y, _ = S.mamba_apply(pb["mixer"], cfg, h_in)
+        y = constrain_batch(y, parallel_ctx)
+        return h + y, None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, p["blocks"])
+    if want == "hidden":
+        return None, jnp.zeros((), jnp.float32), {"hidden": x}
+    return _logits(p, cfg, x), jnp.zeros((), jnp.float32), {}
+
+
+def _mamba_init_cache(cfg, batch, seq, dtype):
+    c0 = S.mamba_init_cache(cfg, batch, dtype)
+    return {"blocks": jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), c0)}
+
+
+def _mamba_decode(p, cfg, batch, cache, parallel_ctx=None):
+    x = L.embed_apply(p["embed"], batch["tokens"], cfg.dtype)
+
+    def body(h, xs):
+        pb, ci = xs
+        y, c_new = S.mamba_decode(pb["mixer"], cfg,
+                                  L.norm_apply(pb["ln"], h, cfg.norm), ci)
+        return h + y, c_new
+
+    x, new_c = jax.lax.scan(body, x, (p["blocks"], cache["blocks"]))
+    return _logits(p, cfg, x), {"blocks": new_c}
+
+
+# ------------------------------------------------------------------------- #
+# ZambaLM (hybrid): mamba2 backbone + weight-shared attention block
+# ------------------------------------------------------------------------- #
+def _zamba_counts(cfg):
+    n_groups = cfg.n_layers // cfg.attn_every
+    trailing = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, trailing
+
+
+def _zamba_init(key, cfg):
+    ks = jax.random.split(key, 8)
+    n_groups, trailing = _zamba_counts(cfg)
+    d = cfg.d_model
+    p = {
+        "embed": L.embed_init(ks[0], cfg.vocab, d, cfg.param_dtype),
+        # stacked (n_groups, attn_every, ...) mamba blocks
+        "mamba": _stack_init(
+            ks[1], n_groups,
+            lambda k: _stack_init(k, cfg.attn_every,
+                                  lambda k2: _mamba_block_init(k2, cfg))),
+        # ONE weight-shared transformer block (zamba2); per-invocation input
+        # projections concat([x, x_emb0]) -> d give invocation specificity
+        "shared": BL.block_init(ks[2], cfg, kind="dense", is_block0=True),
+        "in_proj": jax.random.normal(
+            ks[3], (n_groups, 2 * d, d), jnp.dtype(cfg.param_dtype)) / np.sqrt(2 * d),
+        "final_norm": L.norm_init(d, cfg.norm, cfg.param_dtype),
+    }
+    if cfg.connection in fal.NEEDS_LN_FAL:
+        p["shared_ln_fal"] = L.norm_init(d, cfg.norm, cfg.param_dtype)
+    if trailing:
+        p["mamba_tail"] = _stack_init(
+            ks[4], trailing, lambda k: _mamba_block_init(k, cfg))
+    return p
+
+
+def _zamba_shared_block(p, cfg, x, x0, in_proj, a1_sig, positions, *,
+                        first, mode="train", cache=None, pos=None):
+    """One invocation of the weight-shared attention block (FAL-aware)."""
+    h_in = jnp.concatenate([x, x0], axis=-1) @ in_proj.astype(x.dtype)
+    shared = dict(p["shared"])
+    if "shared_ln_fal" in p:
+        shared["ln_fal"] = p["shared_ln_fal"]
+    out, a_raw, _, c_new = BL.block_apply(
+        shared, cfg, h_in, a1_sig, positions, 0, kind="dense",
+        is_block0=first, mode=mode, cache=cache, pos=pos)
+    # block returns h_in + attn + mlp; zamba adds only the delta to the
+    # backbone residual stream
+    return x + (out - h_in), a_raw, c_new
+
+
+def _zamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    x0 = L.embed_apply(p["embed"], tokens, cfg.dtype)
+    x = x0
+    n_groups, trailing = _zamba_counts(cfg)
+
+    def mamba_seg(h, pstack):
+        def body(hh, pb):
+            # same activation pin as MambaLM (EXPERIMENTS.md §Perf M1)
+            h_in = constrain_batch(L.norm_apply(pb["ln"], hh, cfg.norm),
+                                   parallel_ctx)
+            y, _ = S.mamba_apply(pb["mixer"], cfg, h_in)
+            return hh + constrain_batch(y, parallel_ctx), None
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, pstack)
+        return h
+
+    # group 0 (produces the first-attention signal); rematted — it sits
+    # outside the group scan (EXPERIMENTS.md §Perf D2)
+    def group0(p, x):
+        x = mamba_seg(x, jax.tree.map(lambda a: a[0], p["mamba"]))
+        return _zamba_shared_block(
+            p, cfg, x, x0, p["in_proj"][0], None, positions, first=True,
+            mode=mode)
+    x, a1_raw, _ = _maybe_remat(group0, cfg)(p, x)
+    a1_sig = fal.first_attention_signal(cfg, p["shared"], a1_raw)
+
+    def group_body(h, xs):
+        pst, iproj = xs
+        h = mamba_seg(h, pst)
+        h, _, _ = _zamba_shared_block(p, cfg, h, x0, iproj, a1_sig,
+                                      positions, first=False, mode=mode)
+        return h, None
+
+    if n_groups > 1:
+        rest = jax.tree.map(lambda a: a[1:], p["mamba"])
+        x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x,
+                            (rest, p["in_proj"][1:]))
+    if trailing:
+        x = mamba_seg(x, p["mamba_tail"])
+    if want == "hidden":
+        return None, jnp.zeros((), jnp.float32), {"hidden": x}
+    return _logits(p, cfg, x), jnp.zeros((), jnp.float32), {}
+
+
+def _zamba_init_cache(cfg, batch, seq, dtype):
+    n_groups, trailing = _zamba_counts(cfg)
+    mc = S.mamba_init_cache(cfg, batch, dtype)
+    ac = A.gqa_init_cache(cfg, batch, seq, dtype)
+    st = lambda c, n: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), c)
+    cache = {"mamba": st(st(mc, cfg.attn_every), n_groups),
+             "attn": st(ac, n_groups)}
+    if trailing:
+        cache["mamba_tail"] = st(mc, trailing)
+    return cache
+
+
+def _zamba_decode(p, cfg, batch, cache, parallel_ctx=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    x0 = L.embed_apply(p["embed"], tokens, cfg.dtype)
+    x = x0
+    n_groups, trailing = _zamba_counts(cfg)
+
+    def mamba_seg(h, pstack, cstack):
+        def body(hh, xs):
+            pb, ci = xs
+            y, c_new = S.mamba_decode(pb["mixer"], cfg,
+                                      L.norm_apply(pb["ln"], hh, cfg.norm), ci)
+            return hh + y, c_new
+        return jax.lax.scan(body, h, (pstack, cstack))
+
+    x, mc0 = mamba_seg(x, jax.tree.map(lambda a: a[0], p["mamba"]),
+                       jax.tree.map(lambda a: a[0], cache["mamba"]))
+    x, a1_raw, ac0 = _zamba_shared_block(
+        p, cfg, x, x0, p["in_proj"][0], None, None, first=True,
+        mode="decode", cache=jax.tree.map(lambda a: a[0], cache["attn"]),
+        pos=pos)
+    a1_sig = fal.first_attention_signal(cfg, p["shared"], a1_raw)
+
+    def group_body(h, xs):
+        pst, iproj, mci, aci = xs
+        h, mc_new = mamba_seg(h, pst, mci)
+        h, _, ac_new = _zamba_shared_block(
+            p, cfg, h, x0, iproj, a1_sig, None, first=False, mode="decode",
+            cache=aci, pos=pos)
+        return h, (mc_new, ac_new)
+
+    new_cache = dict(cache)
+    if n_groups > 1:
+        rest_p = jax.tree.map(lambda a: a[1:], p["mamba"])
+        rest_mc = jax.tree.map(lambda a: a[1:], cache["mamba"])
+        rest_ac = jax.tree.map(lambda a: a[1:], cache["attn"])
+        x, (mc_rest, ac_rest) = jax.lax.scan(
+            group_body, x, (rest_p, p["in_proj"][1:], rest_mc, rest_ac))
+        new_cache["mamba"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a[None], b], 0), mc0, mc_rest)
+        new_cache["attn"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a[None], b], 0), ac0, ac_rest)
+    else:
+        new_cache["mamba"] = jax.tree.map(lambda a, n: a.at[0].set(n),
+                                          cache["mamba"], mc0)
+        new_cache["attn"] = jax.tree.map(lambda a, n: a.at[0].set(n),
+                                         cache["attn"], ac0)
+    if trailing:
+        x, mct = mamba_seg(x, p["mamba_tail"], cache["mamba_tail"])
+        new_cache["mamba_tail"] = mct
+    return _logits(p, cfg, x), new_cache
+
+
+# ------------------------------------------------------------------------- #
+# Whisper (audio enc-dec): conv/mel frontend is a STUB — inputs are
+# precomputed frame embeddings (DESIGN.md carve-out)
+# ------------------------------------------------------------------------- #
+def _whisper_init(key, cfg):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {
+        "embed": L.embed_init(ks[0], cfg.vocab, d, cfg.param_dtype),
+        "pos_emb": jax.random.normal(ks[1], (cfg.max_seq, d),
+                                     jnp.dtype(cfg.param_dtype)) * 0.02,
+        "enc_pos": jax.random.normal(ks[2], (cfg.n_enc_frames, d),
+                                     jnp.dtype(cfg.param_dtype)) * 0.02,
+        "enc_block0": BL.block_init(ks[3], cfg, is_block0=True),
+        "enc_blocks": _stack_init(ks[4], cfg.n_enc_layers - 1,
+                                  lambda k: BL.block_init(k, cfg)),
+        "enc_norm": L.norm_init(d, cfg.norm, cfg.param_dtype),
+        "dec_block0": BL.block_init(ks[5], cfg, cross=True, is_block0=True),
+        "dec_blocks": _stack_init(ks[6], cfg.n_layers - 1,
+                                  lambda k: BL.block_init(k, cfg, cross=True)),
+        "final_norm": L.norm_init(d, cfg.norm, cfg.param_dtype),
+    }
+    return p
+
+
+def whisper_encode(p, cfg, frames):
+    """frames: (B, F, d) stubbed frame embeddings."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + p["enc_pos"].astype(
+        jnp.dtype(cfg.dtype))[None, :frames.shape[1]]
+    # encoder self-attention is bidirectional (causal=False), no rope
+    enc0 = _maybe_remat(
+        lambda pb, h: BL.block_apply(pb, cfg, h, None, None, 0,
+                                     is_block0=True, mode="prefill",
+                                     causal=False), cfg)
+    x, a1_raw, _, _ = enc0(p["enc_block0"], x)
+    a1_sig = fal.first_attention_signal(cfg, p["enc_block0"], a1_raw)
+
+    def body(h, pb):
+        h, _, _, _ = BL.block_apply(pb, cfg, h, a1_sig, None, 0,
+                                    mode="prefill", causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["enc_blocks"])
+    return L.norm_apply(p["enc_norm"], x, cfg.norm)
+
+
+def _whisper_forward(p, cfg, batch, mode, parallel_ctx=None,
+                     want="logits"):
+    enc_out = whisper_encode(p, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    x = L.embed_apply(p["embed"], tokens, cfg.dtype) \
+        + p["pos_emb"].astype(jnp.dtype(cfg.dtype))[None, :Sq]
+
+    dec0 = _maybe_remat(
+        lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, 0,
+                                     is_block0=True, mode=mode,
+                                     enc_out=enc_out), cfg)
+    x, a1_raw, _, _ = dec0(p["dec_block0"], x)
+    a1_sig = fal.first_attention_signal(cfg, p["dec_block0"], a1_raw)
+
+    def body(h, pb):
+        h, _, _, _ = BL.block_apply(pb, cfg, h, a1_sig, positions, 0,
+                                    mode=mode, enc_out=enc_out)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["dec_blocks"])
+    if want == "hidden":
+        return None, jnp.zeros((), jnp.float32), {"hidden": x}
+    return _logits(p, cfg, x), jnp.zeros((), jnp.float32), {}
+
+
+def _whisper_init_cache(cfg, batch, seq, dtype):
+    c0 = A.gqa_init_cache(cfg, batch, seq, dtype)
+    rest = cfg.n_layers - 1
+    return {
+        "block0": c0,
+        "blocks": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (rest,) + a.shape), c0),
+        "enc_out": jnp.zeros((batch, cfg.n_enc_frames, cfg.d_model),
+                             jnp.dtype(dtype)),
+    }
+
+
+def _whisper_decode(p, cfg, batch, cache, parallel_ctx=None):
+    tokens, pos = batch["tokens"], batch["pos"]
+    enc_out = cache["enc_out"].astype(jnp.dtype(cfg.dtype))
+    x = L.embed_apply(p["embed"], tokens, cfg.dtype) \
+        + p["pos_emb"].astype(jnp.dtype(cfg.dtype))[pos][:, None]
+
+    x, a1_raw, _, c0 = BL.block_apply(
+        p["dec_block0"], cfg, x, None, None, 0, is_block0=True,
+        mode="decode", enc_out=enc_out, cache=cache["block0"], pos=pos)
+    a1_sig = fal.first_attention_signal(cfg, p["dec_block0"], a1_raw)
+
+    def body(h, xs):
+        pb, ci = xs
+        h, _, _, c_new = BL.block_apply(pb, cfg, h, a1_sig, None, 0,
+                                        mode="decode", enc_out=enc_out,
+                                        cache=ci, pos=pos)
+        return h, c_new
+
+    x, new_c = jax.lax.scan(body, x, (p["dec_blocks"], cache["blocks"]))
+    return _logits(p, cfg, x), {"block0": c0, "blocks": new_c,
+                                "enc_out": cache["enc_out"]}
+
+
+# ------------------------------------------------------------------------- #
+# dispatch
+# ------------------------------------------------------------------------- #
+def init_params(key, cfg):
+    if cfg.family == "ssm":
+        return _mamba_init(key, cfg)
+    if cfg.family == "hybrid":
+        return _zamba_init(key, cfg)
+    if cfg.family == "audio":
+        return _whisper_init(key, cfg)
+    return _decoder_init(key, cfg)
+
+
+def forward(params, cfg, batch, mode="train", parallel_ctx=None,
+            want="logits"):
+    """train/prefill: -> (logits, aux_loss, extras)."""
+    fn = {"ssm": _mamba_forward, "hybrid": _zamba_forward,
+          "audio": _whisper_forward}.get(cfg.family, _decoder_forward)
+    return fn(params, cfg, batch, mode, parallel_ctx, want=want)
+
+
+def init_cache(cfg, batch, seq, dtype="bfloat16"):
+    if cfg.family == "ssm":
+        return _mamba_init_cache(cfg, batch, seq, dtype)
+    if cfg.family == "hybrid":
+        return _zamba_init_cache(cfg, batch, seq, dtype)
+    if cfg.family == "audio":
+        return _whisper_init_cache(cfg, batch, seq, dtype)
+    return _decoder_init_cache(None, cfg, batch, seq, dtype)
+
+
+def decode_step(params, cfg, batch, cache, parallel_ctx=None):
+    """-> (logits (B,1,V), new_cache)."""
+    fn = {"ssm": _mamba_decode, "hybrid": _zamba_decode,
+          "audio": _whisper_decode}.get(cfg.family, _decoder_decode)
+    return fn(params, cfg, batch, cache, parallel_ctx)
+
+
+def _mtp_loss(p, cfg, batch, hidden):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from h_t and emb_{t+1}."""
+    tokens = batch["tokens"]
+    emb_next = L.embed_apply(p["embed"], tokens[:, 1:], cfg.dtype)
+    h = hidden[:, :-1]
+    mtp = p["mtp"]
+    z = jnp.concatenate([L.norm_apply(mtp["norm_h"], h, cfg.norm),
+                         L.norm_apply(mtp["norm_e"], emb_next, cfg.norm)], -1)
+    z = L.dense_apply(mtp["proj"], z)
+    B, S1 = z.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S1)[None], (B, S1))
+    z, _, _, _ = BL.block_apply(mtp["block"], cfg.replace(connection="preln"),
+                                z, None, positions, 0, kind="dense",
+                                mode="train")
+    logits = _logits(p, cfg, z)                      # (B, S-1, V)
+    return cross_entropy(logits[:, :-1], tokens[:, 2:])
+
+
+def _ce_tail(p, cfg, hidden, tokens):
+    logits = _logits(p, cfg, hidden)
+    return cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+def loss_fn(params, cfg, batch, parallel_ctx=None):
+    # compute CE from the final hidden state under remat: the (B,S,V)
+    # logits (+ their fp32 softmax copies) are recomputed in backward
+    # instead of stashed (EXPERIMENTS.md §Perf D2)
+    _, aux, extras = forward(params, cfg, batch, "train", parallel_ctx,
+                             want="hidden")
+    tokens = batch["tokens"]
+    tail = jax.checkpoint(functools.partial(_ce_tail, cfg=cfg)) \
+        if cfg.remat else functools.partial(_ce_tail, cfg=cfg)
+    ce = tail(params, hidden=extras["hidden"], tokens=tokens)
+    loss = ce + cfg.router_aux_coef * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp_depth and "mtp" in params:
+        mtp_fn = jax.checkpoint(functools.partial(_mtp_loss, cfg=cfg)) \
+            if cfg.remat else functools.partial(_mtp_loss, cfg=cfg)
+        mtp = mtp_fn(params, batch=batch, hidden=extras["hidden"])
+        loss = loss + 0.3 * mtp
+        metrics["mtp"] = mtp
+    return loss, metrics

@@ -1,0 +1,294 @@
+"""Mixture-of-Experts FFN.
+
+Two execution paths:
+
+* ``moe_apply`` (pure jnp): capacity-based top-k dispatch via one-hot cumsum +
+  scatter/gather.  Used on a single device (smoke tests), for decode (token
+  counts are tiny), and as the *oracle* for the sharded path.
+* ``moe_apply_sharded`` (shard_map): expert parallelism over the ``model``
+  mesh axis with explicit ``jax.lax.all_to_all`` dispatch/return — the
+  production train path.  Collective bytes are visible in the lowered HLO and
+  feed the roofline's ICI term.
+
+Routing: softmax top-k with renormalisation, capacity factor ``cf`` (tokens
+above capacity are dropped — standard fixed-shape TPU practice; recorded as a
+deviation from DeepSeek's dropless routing in DESIGN.md §7).  Aux
+load-balance loss per Switch/DeepSeek: ``E * sum_e f_e * P_e``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------------- #
+# init
+# ------------------------------------------------------------------------- #
+def moe_init(key, cfg):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    pd = jnp.dtype(cfg.param_dtype)
+    p = {
+        "router": jax.random.normal(ks[0], (d, E), pd) * s_in,
+        "wi": jax.random.normal(ks[1], (E, d, f), pd) * s_in,
+        "wg": jax.random.normal(ks[2], (E, d, f), pd) * s_in,
+        "wo": jax.random.normal(ks[3], (E, f, d), pd) * s_out,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, f * cfg.n_shared_experts,
+                                 "swiglu", cfg.param_dtype)
+    return p
+
+
+def _capacity(T, k, E, cf):
+    return max(4, int(math.ceil(T * k / E * cf)))
+
+
+# ------------------------------------------------------------------------- #
+# routing + dispatch plumbing (shared by both paths)
+# ------------------------------------------------------------------------- #
+def _route(p, cfg, x2d):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux_loss)."""
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    E = cfg.n_experts
+    if cfg.route_groups:
+        # group-limited routing (DeepSeek-V3 node-limited top-k): keep only
+        # the top `route_group_limit` groups per token (group score = sum of
+        # top-2 affinities within the group), mask the rest.
+        G = cfg.route_groups
+        pg = probs.reshape(-1, G, E // G)
+        top2 = jax.lax.top_k(pg, min(2, E // G))[0].sum(-1)       # (T, G)
+        _, gidx = jax.lax.top_k(top2, cfg.route_group_limit)      # (T, L)
+        gmask = jnp.zeros_like(top2).at[
+            jnp.arange(top2.shape[0])[:, None], gidx].set(1.0)
+        probs = (pg * gmask[:, :, None]).reshape(-1, E)
+    w, e = jax.lax.top_k(probs, cfg.top_k)                  # (T, k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    # load-balance aux: fraction routed vs mean prob
+    f_e = jnp.mean(jax.nn.one_hot(e, E, dtype=jnp.float32).sum(1), 0)  # (E,)
+    P_e = jnp.mean(probs, 0)
+    aux = E * jnp.sum(f_e * P_e)
+    return w.astype(x2d.dtype), e, aux
+
+
+def _dispatch_indices(e, k, E, C):
+    """e: (T, k) expert ids -> (e_flat, pos, valid) each (T*k,)."""
+    ef = e.reshape(-1)                                       # (N,) token-major
+    onehot = jax.nn.one_hot(ef, E, dtype=jnp.int32)          # (N, E)
+    cum = jnp.cumsum(onehot, axis=0) - onehot                # exclusive
+    pos = jnp.take_along_axis(cum, ef[:, None], axis=1)[:, 0]
+    valid = pos < C
+    return ef, jnp.where(valid, pos, C - 1), valid
+
+
+def _expert_ffn(wi, wg, wo, xs):
+    """xs: (E_loc, C*, d); w*: (E_loc, d, f)/(E_loc, f, d)."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, wg)) * \
+        jnp.einsum("ecd,edf->ecf", xs, wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+# ------------------------------------------------------------------------- #
+# pure-jnp path (single device / decode / oracle)
+# ------------------------------------------------------------------------- #
+def moe_apply(p, cfg, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T, k, E = B * S, cfg.top_k, cfg.n_experts
+    C = _capacity(T, k, E, cfg.capacity_factor)
+    x2d = x.reshape(T, d)
+    w, e, aux = _route(p, cfg, x2d)
+    ef, pos, valid = _dispatch_indices(e, k, E, C)
+    tok = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[ef, pos].add(x2d[tok] * valid[:, None].astype(x.dtype))
+    out_buf = _expert_ffn(p["wi"].astype(x.dtype), p["wg"].astype(x.dtype),
+                          p["wo"].astype(x.dtype), buf)
+    gathered = out_buf[ef, pos] * valid[:, None].astype(x.dtype)  # (N, d)
+    y = jnp.sum(gathered.reshape(T, k, d) * w[..., None], axis=1)
+    if "shared" in p:
+        y = y + L.mlp_apply(p["shared"], x2d, "swiglu")
+    return y.reshape(B, S, d), aux
+
+
+# ------------------------------------------------------------------------- #
+# shard_map expert-parallel path (training)
+# ------------------------------------------------------------------------- #
+def moe_apply_sharded(p, cfg, x, mesh, data_axes, model_axis):
+    """Expert parallelism: experts sharded over ``model_axis``; tokens
+    all-to-all'd to expert owners and back.  x: (B, S, d) global."""
+    from jax.sharding import PartitionSpec as P
+
+    M = mesh.shape[model_axis]
+    E = cfg.n_experts
+    assert E % M == 0, (E, M)
+
+    def local_fn(router, wi, wg, wo, shared, x_loc):
+        # x_loc: (b, S/M, d) — tokens are sharded over the model axis too
+        # (replicating them would duplicate routing + expert compute x M,
+        # EXPERIMENTS.md §Perf D4)
+        b, S, d = x_loc.shape
+        T, k = b * S, cfg.top_k
+        C = _capacity(T, k, E, cfg.capacity_factor)
+        x2d = x_loc.reshape(T, d)
+        pl = {"router": router}
+        w, e, aux = _route(pl, cfg, x2d)
+        ef, pos, valid = _dispatch_indices(e, k, E, C)
+        tok = jnp.repeat(jnp.arange(T), k)
+        buf = jnp.zeros((E, C, d), x_loc.dtype)
+        buf = buf.at[ef, pos].add(x2d[tok] * valid[:, None].astype(x_loc.dtype))
+        # dispatch: (E, C, d) -> (M, E_loc, C, d) -> A2A -> src-major buffer
+        buf = buf.reshape(M, E // M, C, d)
+        buf = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        # local experts over all sources' tokens
+        xs = buf.transpose(1, 0, 2, 3).reshape(E // M, M * C, d)
+        ys = _expert_ffn(wi.astype(x_loc.dtype), wg.astype(x_loc.dtype),
+                         wo.astype(x_loc.dtype), xs)
+        ys = ys.reshape(E // M, M, C, d).transpose(1, 0, 2, 3)
+        ys = jax.lax.all_to_all(ys, model_axis, split_axis=0, concat_axis=0,
+                                tiled=False)
+        out_buf = ys.reshape(E, C, d)
+        gathered = out_buf[ef, pos] * valid[:, None].astype(x_loc.dtype)
+        y = jnp.sum(gathered.reshape(T, k, d) * w[..., None], axis=1)
+        if shared is not None:
+            y = y + L.mlp_apply(shared, x2d, "swiglu")
+        aux = jax.lax.pmean(aux, data_axes + (model_axis,))
+        return y.reshape(b, S, d), aux
+
+    shared = p.get("shared")
+    in_specs = (P(), P(model_axis), P(model_axis), P(model_axis),
+                None if shared is None else jax.tree.map(lambda _: P(), shared),
+                P(data_axes, model_axis, None))
+    out_specs = (P(data_axes, model_axis, None), P())
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(p["router"], p["wi"], p["wg"], p["wo"], shared, x)
+
+
+# ------------------------------------------------------------------------- #
+# shard-slot dispatch (beyond-paper, EXPERIMENTS.md §Perf D3)
+# ------------------------------------------------------------------------- #
+def moe_apply_shard_slot(p, cfg, x, mesh, data_axes, model_axis):
+    """Expert parallelism with ONE wire crossing per (token, destination
+    shard) instead of one per (token, expert).
+
+    With top-8 token-choice dispatch, the per-expert capacity buffer ships
+    each token up to 8x (+ capacity padding).  Group-limited routing
+    (cfg.route_groups aligned to the expert shards, limit L) bounds each
+    token to L destination shards; tokens are packed into per-shard slots
+    (M, C_shard, d), all-to-all'd ONCE, then dispatched to local experts on
+    the receiving side.  Payload drops from k*cf to ~L*cf' copies.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    M = mesh.shape[model_axis]
+    E = cfg.n_experts
+    L = cfg.route_group_limit if cfg.route_groups else min(cfg.top_k, M)
+    assert E % M == 0
+
+    def local_fn(router, wi, wg, wo, shared, x_loc):
+        # x_loc: (b, S/M, d) — sequence sharded over model (§Perf D4)
+        b, S, d = x_loc.shape
+        T, k = b * S, cfg.top_k
+        E_loc = E // M
+        Cs = _capacity(T, L, M, cfg.capacity_factor)   # slots per dest shard
+        x2d = x_loc.reshape(T, d)
+        w, e, aux = _route({"router": router}, cfg, x2d)
+
+        # destination shard per (token, k-slot); dedupe to per-token shard
+        # slots: shard s needed iff any expert maps to it
+        dest = e // E_loc                                       # (T, k)
+        need = jnp.zeros((T, M), jnp.int32).at[
+            jnp.arange(T)[:, None], dest].set(1)                # (T, M)
+        # position of token t in shard s's send buffer (exclusive cumsum)
+        pos = jnp.cumsum(need, axis=0) - need                   # (T, M)
+        valid = (pos < Cs) & (need > 0)
+        pos_c = jnp.where(valid, pos, Cs - 1)
+
+        # pack send buffer (M, Cs, d); dropped/overflow slots scatter
+        # out-of-bounds with mode="drop"
+        pos_oob = jnp.where(valid, pos, Cs)
+        send = jnp.zeros((M, Cs, d), x_loc.dtype)
+        tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, M))
+        send = send.at[jnp.broadcast_to(jnp.arange(M)[None], (T, M)),
+                       pos_oob].add(
+            x2d[tok_idx] * valid[..., None].astype(x_loc.dtype),
+            mode="drop")
+        recv = jax.lax.all_to_all(send, model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # recv: (M_src, Cs, d) — tokens this shard must process
+
+        # metadata: per (token, k-slot) local expert id + weight, packed the
+        # same way (tiny payload: ints + floats)
+        le = e % E_loc                                          # (T, k)
+        meta_e = jnp.full((M, Cs, k), -1, jnp.int32)
+        meta_w = jnp.zeros((M, Cs, k), jnp.float32)
+        kslot = jnp.broadcast_to(jnp.arange(k)[None], (T, k))
+        vslot = jnp.take_along_axis(valid, dest, axis=1)        # (T, k)
+        pslot = jnp.where(vslot,
+                          jnp.take_along_axis(pos_oob, dest, axis=1), Cs)
+        meta_e = meta_e.at[dest, pslot, kslot].set(le, mode="drop")
+        meta_w = meta_w.at[dest, pslot, kslot].set(
+            w.astype(jnp.float32), mode="drop")
+        meta_e = jax.lax.all_to_all(meta_e, model_axis, 0, 0, tiled=False)
+        meta_w = jax.lax.all_to_all(meta_w, model_axis, 0, 0, tiled=False)
+
+        # local second-stage dispatch: (M_src*Cs) tokens -> E_loc experts
+        N = M * Cs
+        xs = recv.reshape(N, d)
+        ef = meta_e.reshape(N, k)
+        wf = meta_w.reshape(N, k).astype(x_loc.dtype)
+        # expected per-local-expert load: every source shard contributes
+        # ~T*k/E tokens per expert; N is mostly padding — size on that.
+        C2 = _capacity(M * T, k, E, cfg.capacity_factor) * 2
+        ef_flat = jnp.where(ef >= 0, ef, 0).reshape(-1)
+        onehot = jax.nn.one_hot(ef_flat, E_loc, dtype=jnp.int32) * \
+            (ef.reshape(-1) >= 0)[:, None]
+        cum = jnp.cumsum(onehot, axis=0) - onehot
+        pos2 = jnp.take_along_axis(cum, ef_flat[:, None], 1)[:, 0]
+        ok2 = (ef.reshape(-1) >= 0) & (pos2 < C2)
+        pos2_oob = jnp.where(ok2, pos2, C2)
+        tok2 = jnp.repeat(jnp.arange(N), k)
+        buf = jnp.zeros((E_loc, C2, d), x_loc.dtype)
+        buf = buf.at[ef_flat, pos2_oob].add(
+            xs[tok2] * ok2[:, None].astype(x_loc.dtype), mode="drop")
+        out_buf = _expert_ffn(wi.astype(x_loc.dtype), wg.astype(x_loc.dtype),
+                              wo.astype(x_loc.dtype), buf)
+        pos2c = jnp.where(ok2, pos2, C2 - 1)
+        gath = out_buf[ef_flat, pos2c] * ok2[:, None].astype(x_loc.dtype)
+        # weighted partial sum per received token (weights applied HERE)
+        y_tok = jnp.sum(gath.reshape(N, k, d) * wf[..., None], axis=1)
+        y_back = jax.lax.all_to_all(
+            y_tok.reshape(M, Cs, d), model_axis, 0, 0,
+            tiled=False)                                         # (M, Cs, d)
+
+        # final combine: token t sums its <= M shard partials
+        pos_rd = jnp.where(valid, pos, 0)
+        parts = y_back[jnp.broadcast_to(jnp.arange(M)[None], (T, M)), pos_rd]
+        y = jnp.sum(parts * valid[..., None].astype(x_loc.dtype), axis=1)
+        if shared is not None:
+            y = y + L_mlp(shared, x2d)
+        aux = jax.lax.pmean(aux, data_axes + (model_axis,))
+        return y.reshape(b, S, d), aux
+
+    def L_mlp(shared, x2d):
+        from repro.models import layers as LL
+        return LL.mlp_apply(shared, x2d, "swiglu")
+
+    shared = p.get("shared")
+    in_specs = (P(), P(model_axis), P(model_axis), P(model_axis),
+                None if shared is None else jax.tree.map(lambda _: P(), shared),
+                P(data_axes, model_axis, None))
+    out_specs = (P(data_axes, model_axis, None), P())
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(p["router"], p["wi"], p["wg"], p["wo"], shared, x)

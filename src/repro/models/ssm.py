@@ -1,0 +1,182 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill (within-chunk quadratic + sequential inter-chunk
+state recurrence via ``lax.scan``), O(1)-state single-step update for decode.
+FAL is inapplicable here (no MHA->MLP pair; DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N  # x, B, C (n_groups = 1)
+    return d_inner, H, N, conv_dim
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    d_inner, H, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    in_dim = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, in_dim), pd) / np.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), pd) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(pd),
+        "D": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd) + jnp.log(jnp.expm1(0.01)).astype(pd),
+        "norm": L.norm_init(d_inner, "rmsnorm", cfg.param_dtype),
+        "out_proj": jax.random.normal(ks[2], (d_inner, d), pd) / np.sqrt(d_inner),
+    }
+    return p
+
+
+def _split_in(cfg, h):
+    d_inner, H, N, _ = _dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        h, np.cumsum([d_inner, d_inner, N, N]).tolist(), axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(xBC, w, b, cache=None):
+    """Depthwise causal conv, window K.  xBC: (B, S, C).
+    cache: (B, K-1, C) previous inputs (decode/chunk streaming)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = cache.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+              for i in range(K))
+    new_cache = xp[:, -(K - 1):]
+    return jax.nn.silu(out + b.astype(xBC.dtype)), new_cache
+
+
+def _segsum(a):
+    """a: (..., cs) -> (..., cs, cs) with T[i,j] = sum_{j<k<=i} a_k (j<=i)."""
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    T = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(mask, T, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state=None):
+    """SSD (Mamba2 alg. listing), chunked.
+
+    x: (b, s, h, p)  dt: (b, s, h) (already softplus'd)  A: (h,) negative
+    Bm, Cm: (b, s, n)  -> y: (b, s, h, p), final_state: (b, h, p, n)
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    # mixed precision (EXPERIMENTS.md §Perf M3): the decay/state math stays
+    # fp32; the bulk (p-dim) tensors keep the input dtype (bf16 on TPU)
+    cdt = x.dtype
+    xdt = (xc * dtc[..., None].astype(cdt))        # input discretization
+    Adt = (dtc * A[None, None, None, :]).astype(jnp.float32)    # (b,nc,cs,h)
+    Acum = jnp.cumsum(Adt, axis=2)                 # (b,nc,cs,h)
+
+    # intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(Adt.transpose(0, 1, 3, 2))).astype(cdt)
+    scores = jnp.einsum("bzin,bzjn->bzij", Cc, Bc,
+                        preferred_element_type=jnp.float32).astype(cdt)
+    y_diag = jnp.einsum("bzij,bzhij,bzjhp->bzihp", scores, Lmat, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # per-chunk final states
+    decay_states = jnp.exp(Acum[:, :, -1:, :] - Acum).astype(cdt)
+    states = jnp.einsum("bzcn,bzch,bzchp->bzhpn", Bc, decay_states, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence — the STATE stays fp32 (official Mamba2 keeps
+    # fp32 states; also the `states` einsum accumulates f32)
+    chunk_decay = jnp.exp(Acum[:, :, -1, :])                    # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state *before* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,nc,h,p,n)
+
+    # contribution of carried-in state
+    state_decay = jnp.exp(Acum)                                 # (b,nc,cs,h)
+    y_off = jnp.einsum("bzcn,bzhpn,bzch->bzchp", Cc.astype(jnp.float32),
+                       prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba_apply(p, cfg, x, init_state=None, conv_cache=None):
+    """Full-sequence Mamba2 block.  x: (B, S, d) -> (y, (state, conv_cache))."""
+    d_inner, H, N, _ = _dims(cfg)
+    B, S, _ = x.shape
+    h = x @ p["in_proj"].astype(x.dtype)
+    z, xc, Bm, Cm, dt = _split_in(cfg, h)
+    xBC, new_conv = _causal_conv(jnp.concatenate([xc, Bm, Cm], -1),
+                                 p["conv_w"], p["conv_b"], conv_cache)
+    xc, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(B, S, H, cfg.ssm_head_dim)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm,
+                           min(cfg.ssm_chunk, S), init_state)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.norm_apply(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), (state, new_conv)
+
+
+def mamba_init_cache(cfg, batch, dtype):
+    d_inner, H, N, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.dtype(dtype)),
+    }
+
+
+def mamba_decode(p, cfg, x, cache):
+    """Single-token state update.  x: (B, 1, d)."""
+    d_inner, H, N, _ = _dims(cfg)
+    B = x.shape[0]
+    h = x @ p["in_proj"].astype(x.dtype)
+    z, xc, Bm, Cm, dt = _split_in(cfg, h)
+    xBC, new_conv = _causal_conv(jnp.concatenate([xc, Bm, Cm], -1),
+                                 p["conv_w"], p["conv_b"], cache["conv"])
+    xc, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc[:, 0].reshape(B, H, cfg.ssm_head_dim).astype(jnp.float32)
+    dA = jnp.exp(dt * A[None, :])                                    # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0].astype(jnp.float32), xh)
+    state = cache["state"] * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.norm_apply(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), {"state": state, "conv": new_conv}

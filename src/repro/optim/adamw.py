@@ -1,0 +1,72 @@
+"""AdamW in pure JAX (pytree states) + gradient clipping + optional ZeRO-1
+style optimizer-state sharding hints (the state mirrors the param tree, so
+its PartitionSpec tree is derived the same way — launch/mesh.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.001
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # bf16 for the 671B config (DESIGN.md §4)
+
+
+def init_opt_state(params, ocfg: AdamWConfig):
+    dt = jnp.dtype(ocfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path, p):
+    """No weight decay on norms / biases / 1-d params."""
+    return p.ndim >= 2
+
+
+def adamw_update(params, grads, opt_state, ocfg: AdamWConfig):
+    count = opt_state["count"] + 1
+    lr = ocfg.lr(count) if callable(ocfg.lr) else ocfg.lr
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    bc1 = 1 - ocfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - ocfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = ocfg.b1 * m.astype(jnp.float32) + (1 - ocfg.b1) * g32
+        v_new = ocfg.b2 * v.astype(jnp.float32) + (1 - ocfg.b2) * g32 * g32
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + ocfg.eps)
+        if _decay_mask(None, p):
+            step = step + ocfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm

@@ -1,0 +1,52 @@
+"""Lossy gradient-compression baselines from the paper's Fig 7 comparison:
+
+* Grad-Q  [QSGD, ref 36]: per-tensor stochastic-free int8 quantisation of the
+  gradients (quantise -> dequantise models the communication payload).
+* Grad-LR [PowerSGD, ref 37]: rank-r approximation of 2-D gradients via a
+  fixed random projection (one power-iteration step).
+
+Both are *lossy* — the paper's point is that FAL removes communication
+structurally, without touching gradient fidelity.  bench_comm.py compares
+the quality hit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(tree):
+    def q(g):
+        a = jnp.max(jnp.abs(g)) + 1e-12
+        q8 = jnp.clip(jnp.round(g / a * 127), -127, 127).astype(jnp.int8)
+        return q8.astype(g.dtype) * (a / 127)
+    return jax.tree.map(q, tree)
+
+
+def lowrank(tree, rank=4, seed=0):
+    def lr(g):
+        if g.ndim != 2 or min(g.shape) <= rank:
+            return g
+        key = jax.random.PRNGKey(seed + g.shape[0] * 131 + g.shape[1])
+        omega = jax.random.normal(key, (g.shape[1], rank), g.dtype)
+        p = g @ omega                       # (m, r)
+        q, _ = jnp.linalg.qr(p)
+        return q @ (q.T @ g)
+    return jax.tree.map(lr, tree)
+
+
+def compressed_bytes(tree, method):
+    """Communication payload estimate for the bench."""
+    total = 0
+    for g in jax.tree.leaves(tree):
+        if method == "none":
+            total += g.size * 4
+        elif method == "int8":
+            total += g.size * 1 + 4
+        elif method == "lowrank":
+            if g.ndim == 2:
+                r = 4
+                total += (g.shape[0] + g.shape[1]) * r * 4
+            else:
+                total += g.size * 4
+    return total

@@ -1,0 +1,44 @@
+"""LR schedules: cosine, one-cycle (paper Fig 9 / Cramming setting), and WSD
+(warmup-stable-decay; minicpm-2b's native schedule, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak, total_steps, warmup=0.01, floor=0.1):
+    w = max(int(total_steps * warmup), 1)
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / w
+        t = jnp.clip((step - w) / jnp.maximum(total_steps - w, 1), 0, 1)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < w, warm, cos)
+    return f
+
+
+def one_cycle(peak, total_steps, pct_up=0.3):
+    up = max(int(total_steps * pct_up), 1)
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        rise = peak * step / up
+        fall = peak * jnp.clip(1 - (step - up) / jnp.maximum(
+            total_steps - up, 1), 0, 1)
+        return jnp.where(step < up, rise, fall)
+    return f
+
+
+def wsd(peak, total_steps, warmup=0.05, decay=0.1, floor=0.1):
+    """Warmup-Stable-Decay."""
+    w = max(int(total_steps * warmup), 1)
+    d_start = int(total_steps * (1 - decay))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / w
+        t = jnp.clip((step - d_start) / jnp.maximum(total_steps - d_start, 1),
+                     0, 1)
+        dec = peak * (1 - (1 - floor) * t)
+        return jnp.where(step < w, warm, jnp.where(step < d_start, peak, dec))
+    return f

@@ -1,0 +1,122 @@
+"""Serving runtime: batched KV-cache decode with a simple continuous-batching
+request scheduler.
+
+``make_serve_step`` builds the jitted one-token step used by the decode
+dry-run shapes (decode_32k / long_500k): ONE new token against a
+``seq_len``-deep cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def make_serve_step(cfg, parallel_ctx=None):
+    """serve_step(params, cache, tokens (B,1), pos (B,)) ->
+    (next_token (B,), logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        batch = {"tokens": tokens, "pos": pos}
+        logits, new_cache = M.decode_step(params, cfg, batch, cache,
+                                          parallel_ctx)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_then_decode(cfg):
+    """Prefill via repeated decode steps (teacher-forcing the prompt into the
+    cache) then greedy decode.  Used by examples/serve_requests.py."""
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    def generate(params, prompts: np.ndarray, max_new: int, cache):
+        B, P = prompts.shape
+        toks = jnp.asarray(prompts, jnp.int32)
+        out = []
+        nxt = toks[:, 0]
+        for t in range(P + max_new - 1):
+            cur = toks[:, t:t + 1] if t < P else nxt[:, None]
+            pos = jnp.full((B,), t, jnp.int32)
+            nxt, _, cache = serve_step(params, cache, cur, pos)
+            if t >= P - 1:
+                out.append(np.asarray(nxt))
+        return np.stack(out, 1), cache
+
+    return generate
+
+
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,)
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    pos: int = 0
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching: fixed B slots; finished requests are
+    replaced by queued ones.  Per-slot positions => the per-request ``pos``
+    vector the decode kernels consume."""
+
+    def __init__(self, cfg, params, batch_slots: int, max_seq: int,
+                 cache_dtype="float32"):
+        self.cfg, self.params = cfg, params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(cfg, batch_slots, max_seq, cache_dtype)
+        self.serve_step = jax.jit(make_serve_step(cfg))
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def step(self):
+        """One engine tick: feed each active slot its next token."""
+        self._fill_slots()
+        toks = np.zeros((self.B, 1), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if r.pos < len(r.prompt):
+                toks[i, 0] = r.prompt[r.pos]
+            else:
+                toks[i, 0] = r.generated[-1]
+            pos[i] = r.pos
+        nxt, _, self.cache = self.serve_step(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos))
+        nxt = np.asarray(nxt)
+        finished = []
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.pos += 1
+            if r.pos >= len(r.prompt):
+                r.generated.append(int(nxt[i]))
+            if len(r.generated) >= r.max_new or r.pos >= self.max_seq - 1:
+                r.done = True
+                finished.append(r)
+                self.slots[i] = None
+        return finished
+
+    def run(self):
+        done = []
+        while any(s is not None for s in self.slots) or self.queue:
+            done += self.step()
+        return done

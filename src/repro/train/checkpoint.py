@@ -1,0 +1,62 @@
+"""Checkpointing: flat-key npz + json manifest (no external deps).
+
+Arrays are gathered to host (fine for the CPU/laptop scale this container
+runs; on a real pod you would swap the np.savez for per-host sharded IO —
+the manifest format already records the tree structure needed to do so).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path, state, step=0, meta=None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(path, f"ckpt_{step}.npz"), **flat)
+    manifest = {"step": step, "keys": sorted(flat),
+                "meta": meta or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def latest_step(path):
+    if not os.path.isfile(os.path.join(path, "manifest.json")):
+        return None
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]
+
+
+def restore(path, like, step=None):
+    """Restore into the structure of ``like`` (dtypes/shapes validated)."""
+    step = latest_step(path) if step is None else step
+    data = np.load(os.path.join(path, f"ckpt_{step}.npz"))
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}{i}/")
+                              for i, v in enumerate(tree))
+        arr = data[prefix[:-1]]
+        assert arr.shape == tuple(tree.shape), (prefix, arr.shape, tree.shape)
+        return jnp.asarray(arr, dtype=tree.dtype)
+
+    return rebuild(like)

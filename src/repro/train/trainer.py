@@ -1,0 +1,55 @@
+"""Training loop driver: data -> jitted train_step -> logging/eval/ckpt."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import SyntheticMarkov
+from repro.optim import adamw, schedules
+from repro.train import checkpoint as ckpt
+from repro.train import step as tstep
+
+
+def train(cfg, *, steps=200, batch=8, seq_len=128, lr=3e-4, seed=0,
+          parallel_ctx=None, num_microbatches=1, log_every=20,
+          eval_every=0, ckpt_dir=None, data=None, schedule="cosine",
+          in_shardings=None, callbacks=()):
+    """Returns (state, history)."""
+    sched = {"cosine": schedules.warmup_cosine,
+             "onecycle": schedules.one_cycle,
+             "wsd": schedules.wsd}[schedule](lr, steps)
+    ocfg = adamw.AdamWConfig(lr=sched)
+    state = tstep.init_state(jax.random.PRNGKey(seed), cfg, ocfg)
+    step_fn = jax.jit(tstep.make_train_step(cfg, ocfg, parallel_ctx,
+                                            num_microbatches),
+                      in_shardings=in_shardings, donate_argnums=(0,))
+    eval_fn = jax.jit(tstep.make_eval_step(cfg, parallel_ctx))
+    if data is None:
+        data = SyntheticMarkov(cfg.vocab, seq_len, batch, seed=seed)
+    it = iter(data)
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, b)
+        if (log_every and i % log_every == 0) or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m.update(step=i, wall=time.time() - t0)
+            history.append(m)
+            if log_every:
+                print(f"step {i:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m.get('grad_norm', 0):.2f} "
+                      f"({m['wall']:.1f}s)", flush=True)
+        if eval_every and i and i % eval_every == 0:
+            eb = {k: jnp.asarray(v) for k, v in data.batch_at(10**6 + i).items()}
+            em = eval_fn(state["params"], eb)
+            print(f"  eval ppl {float(em['ppl']):.3f}", flush=True)
+        for cb in callbacks:
+            cb(i, state, metrics)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, state, step=steps,
+                  meta={"arch": cfg.arch_id, "connection": cfg.connection})
+    return state, history

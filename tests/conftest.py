@@ -1,0 +1,17 @@
+import os
+
+# Tests run on the single real CPU device; ONLY tests that need a mesh spawn
+# subprocesses or use the forced-device fixture below (never set the flag
+# globally — smoke tests and benches must see 1 device).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,120 @@
+"""FAL equation oracle tests: block_apply must implement the paper's
+formulas (1), (2), (7) exactly."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import fal
+from repro.models import attention as A
+from repro.models import blocks as BL
+from repro.models import layers as L
+
+
+def setup(conn):
+    cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
+    k = jax.random.PRNGKey(0)
+    p0 = BL.block_init(k, cfg, is_block0=True)
+    p1 = BL.block_init(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 16, cfg.d_model)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    return cfg, p0, p1, x, pos
+
+
+def mha(p, cfg, x, pos):
+    return A.gqa_apply(p["attn"], cfg, L.norm_apply(p["ln1"], x, cfg.norm),
+                       pos)
+
+
+def test_preln_eq1():
+    cfg, p0, p1, x, pos = setup("preln")
+    out, a, _, _ = BL.block_apply(p1, cfg, x, None, pos, 0)
+    # eq (1): X + MHA(LN(X)) + MLP(LN(X + MHA(LN(X))))
+    a_ref = mha(p1, cfg, x, pos)
+    expect = x + a_ref + L.mlp_apply(
+        p1["ffn"], L.norm_apply(p1["ln2"], x + a_ref, cfg.norm), cfg.mlp)
+    assert jnp.allclose(out, expect, atol=1e-5)
+    assert jnp.allclose(a, a_ref, atol=1e-6)
+
+
+def test_fal_eq2():
+    cfg, p0, p1, x, pos = setup("fal")
+    # block 1 exports LN(MHA_1(LN(X_1)))
+    out0, a1_raw, _, _ = BL.block_apply(p0, cfg, x, None, pos, 0,
+                                        is_block0=True)
+    a1_ref = mha(p0, cfg, x, pos)
+    assert jnp.allclose(a1_raw, a1_ref, atol=1e-6)
+    a1n = fal.first_attention_signal(cfg, p0, a1_raw)
+    assert jnp.allclose(a1n, L.norm_apply(p0["ln_a"], a1_ref, cfg.norm),
+                        atol=1e-6)
+    # block 1's own MLP input is LN(X_1) + LN(MHA_1) (footnote 3)
+    expect0 = x + a1_ref + L.mlp_apply(
+        p0["ffn"],
+        L.norm_apply(p0["ln2"], x, cfg.norm) + a1n, cfg.mlp)
+    assert jnp.allclose(out0, expect0, atol=1e-5)
+
+    # eq (2) for a later block
+    out, _, _, _ = BL.block_apply(p1, cfg, out0, a1n, pos, 0)
+    a_i = mha(p1, cfg, out0, pos)
+    expect = out0 + a_i + L.mlp_apply(
+        p1["ffn"],
+        L.norm_apply(p1["ln2"], out0, cfg.norm) + a1n, cfg.mlp)
+    assert jnp.allclose(out, expect, atol=1e-5)
+
+
+def test_falplus_eq7():
+    cfg, p0, p1, x, pos = setup("falplus")
+    out0, a1_raw, _, _ = BL.block_apply(p0, cfg, x, None, pos, 0,
+                                        is_block0=True)
+    a1_sig = fal.first_attention_signal(cfg, p0, a1_raw)
+    assert jnp.allclose(a1_sig, a1_raw)  # FAL+ exports the raw tensor
+    # i = 1 branch: LN(X_1 + MHA_1) only
+    a1_ref = mha(p0, cfg, x, pos)
+    expect0 = x + a1_ref + L.mlp_apply(
+        p0["ffn"], L.norm_apply(p0["ln2"], x + a1_ref, cfg.norm), cfg.mlp)
+    assert jnp.allclose(out0, expect0, atol=1e-5)
+
+    # later block: LN(X + MHA_i) + LN_i(MHA_1)
+    out, _, _, _ = BL.block_apply(p1, cfg, out0, a1_sig, pos, 0)
+    a_i = mha(p1, cfg, out0, pos)
+    expect = out0 + a_i + L.mlp_apply(
+        p1["ffn"],
+        L.norm_apply(p1["ln2"], out0 + a_i, cfg.norm)
+        + L.norm_apply(p1["ln_fal"], a1_sig, cfg.norm), cfg.mlp)
+    assert jnp.allclose(out, expect, atol=1e-5)
+
+
+def test_parallel_mode():
+    cfg, p0, p1, x, pos = setup("parallel")
+    out, _, _, _ = BL.block_apply(p1, cfg, x, None, pos, 0)
+    a_ref = mha(p1, cfg, x, pos)
+    expect = x + a_ref + L.mlp_apply(
+        p1["ffn"], L.norm_apply(p1["ln2"], x, cfg.norm), cfg.mlp)
+    assert jnp.allclose(out, expect, atol=1e-5)
+
+
+def test_mlp_input_dependency_property():
+    """The property the TP runtime keys on (core/fal.py)."""
+    assert fal.mlp_input_depends_on_local_attention("preln")
+    assert fal.mlp_input_depends_on_local_attention("falplus")
+    assert not fal.mlp_input_depends_on_local_attention("fal")
+    assert not fal.mlp_input_depends_on_local_attention("parallel")
+
+
+def test_fal_signal_constant_across_depth():
+    """The first-attention signal must be the SAME tensor at every depth
+    (scan-carried constant): whole-model check via activation capture."""
+    from repro.core import analysis
+    from repro.models import model as M
+    cfg = get_config("llama3.2-3b").reduced().replace(
+        connection="fal", n_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    rec = analysis.collect_block_activations(params, cfg, {"tokens": toks})
+    a1n = fal.first_attention_signal(cfg, params["block0"],
+                                     rec["mha_out"][0])
+    # block 1's mlp_in = ln2(x) + a1n  -> recover a1n and compare
+    pb = jax.tree.map(lambda a: a[0], params["blocks_dense"])
+    recovered = rec["mlp_in"][1] - L.norm_apply(pb["ln2"], rec["x"][1],
+                                                cfg.norm)
+    assert jnp.allclose(recovered, a1n, atol=1e-5)

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticMarkov
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MO
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 8), st.integers(8, 64),
+       st.floats(0.25, 4.0))
+@settings(**SETTINGS)
+def test_rmsnorm_scale_invariance(b, d, c):
+    """rmsnorm(c*x) ~= rmsnorm(x) for c > 0 (exact up to the eps term)."""
+    x = jax.random.normal(jax.random.PRNGKey(b * 100 + d), (b, d)) + 0.1
+    p = L.norm_init(d, "rmsnorm")
+    y1 = L.norm_apply(p, x, "rmsnorm")
+    y2 = L.norm_apply(p, x * c, "rmsnorm")
+    assert jnp.max(jnp.abs(y1 - y2)) < 2e-3
+
+
+@given(st.integers(2, 64), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(seq, heads):
+    x = jax.random.normal(jax.random.PRNGKey(seq), (1, seq, heads, 32))
+    pos = jnp.arange(seq)[None]
+    y = L.apply_rope(x, pos)
+    nx = jnp.linalg.norm(x, axis=-1)
+    ny = jnp.linalg.norm(y, axis=-1)
+    assert jnp.max(jnp.abs(nx - ny)) < 1e-4
+
+
+@given(st.floats(1.0, 100.0))
+@settings(**SETTINGS)
+def test_softcap_bounds(cap):
+    x = jnp.linspace(-1e4, 1e4, 101)
+    y = L.softcap(x, cap)
+    assert bool(jnp.all(jnp.abs(y) <= cap + 1e-5))
+    # monotone
+    assert bool(jnp.all(jnp.diff(y) >= 0))
+
+
+@given(st.integers(0, 30))
+@settings(**SETTINGS)
+def test_causal_masking_no_future_leak(t):
+    """Perturbing tokens strictly after position t must not change the
+    blockwise-attention output at t."""
+    S = 32
+    ks = jax.random.split(jax.random.PRNGKey(t), 4)
+    q = jax.random.normal(ks[0], (1, S, 2, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    o1 = A.blockwise_attention(q, k, v, causal=True, block_q=8)
+    noise = jax.random.normal(ks[3], (1, S - t - 1, 2, 16)) * 10
+    k2 = k.at[:, t + 1:].add(noise)
+    v2 = v.at[:, t + 1:].add(noise)
+    o2 = A.blockwise_attention(q, k2, v2, causal=True, block_q=8)
+    assert jnp.max(jnp.abs(o1[:, t] - o2[:, t])) < 1e-4
+
+
+@given(st.integers(1, 16))
+@settings(**SETTINGS)
+def test_sliding_window_locality(w):
+    """With window w, output at t must ignore keys at positions <= t - w."""
+    S = 32
+    t = S - 1
+    ks = jax.random.split(jax.random.PRNGKey(w), 4)
+    q = jax.random.normal(ks[0], (1, S, 2, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    o1 = A.blockwise_attention(q, k, v, causal=True, window=w, block_q=8)
+    cut = t - w + 1
+    if cut <= 0:
+        return
+    noise = jax.random.normal(ks[3], (1, cut, 2, 16)) * 10
+    o2 = A.blockwise_attention(q, k.at[:, :cut].add(noise),
+                               v.at[:, :cut].add(noise),
+                               causal=True, window=w, block_q=8)
+    assert jnp.max(jnp.abs(o1[:, t] - o2[:, t])) < 1e-4
+
+
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_moe_routing_weights_normalised(T, E, k):
+    k = min(k, E)
+    cfg = get_config("qwen3-moe-30b-a3b").reduced().replace(
+        n_experts=E, top_k=k, d_model=16, moe_d_ff=8, n_shared_experts=0)
+    p = MO.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, 16))
+    w, e, aux = MO._route(p, cfg, x)
+    assert jnp.max(jnp.abs(jnp.sum(w, -1) - 1)) < 1e-5
+    assert bool(jnp.all((e >= 0) & (e < E)))
+    assert float(aux) >= 0.99  # E * sum f_e P_e >= 1 (Cauchy-Schwarz-ish)
+
+
+@given(st.integers(2, 20), st.integers(2, 6))
+@settings(**SETTINGS)
+def test_moe_capacity_dispatch_positions(T, E):
+    """Dispatch positions must be unique per expert and < capacity."""
+    k = 2
+    C = MO._capacity(T, k, E, 1.25)
+    e = jax.random.randint(jax.random.PRNGKey(T * E), (T, k), 0, E)
+    ef, pos, valid = MO._dispatch_indices(e, k, E, C)
+    pairs = set()
+    for i in range(T * k):
+        if bool(valid[i]):
+            key = (int(ef[i]), int(pos[i]))
+            assert key not in pairs
+            assert int(pos[i]) < C
+            pairs.add(key)
+
+
+@given(st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_data_pipeline_deterministic(step):
+    ds1 = SyntheticMarkov(256, 32, 4, seed=3)
+    ds2 = SyntheticMarkov(256, 32, 4, seed=3)
+    b1, b2 = ds1.batch_at(step), ds2.batch_at(step)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 256
+
+
+def test_markov_stream_is_learnable_structure():
+    """Bigram predictability: next token must be one of `branching`
+    successors of the current token."""
+    ds = SyntheticMarkov(128, 64, 4, seed=1, branching=4)
+    b = ds.batch_at(0)["tokens"]
+    for row in b:
+        for t in range(1, len(row)):
+            assert row[t] in ds.table[row[t - 1]]

@@ -1,0 +1,112 @@
+"""Training-substrate tests: loss decreases, checkpoint roundtrip, schedules,
+gradient-compression baselines, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticMarkov, unigram_entropy
+from repro.optim import adamw, grad_compress, schedules
+from repro.serve.decode import ContinuousBatcher, Request
+from repro.train import checkpoint as ckpt
+from repro.train import step as tstep
+from repro.train import trainer
+
+
+def tiny_cfg(**kw):
+    return get_config("gpt2-117m").reduced().replace(
+        vocab=256, max_seq=64, **kw)
+
+
+def test_training_reduces_loss():
+    cfg = tiny_cfg(connection="fal")
+    data = SyntheticMarkov(cfg.vocab, 32, 8, seed=5)
+    state, hist = trainer.train(cfg, steps=60, batch=8, seq_len=32,
+                                data=data, log_every=59, lr=2e-3)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first - 0.3, (first, last)
+    assert last < np.log(cfg.vocab)  # beats uniform
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg = tiny_cfg()
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    state = tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32),
+                                          0, cfg.vocab)}
+    s1, m1 = jax.jit(tstep.make_train_step(cfg, ocfg, None, 1))(state, batch)
+    s2, m2 = jax.jit(tstep.make_train_step(cfg, ocfg, None, 4))(state, batch)
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])))
+    assert diff < 1e-5, diff
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_cfg()
+    ocfg = adamw.AdamWConfig()
+    state = tstep.init_state(jax.random.PRNGKey(0), cfg, ocfg)
+    ckpt.save(str(tmp_path), state, step=7, meta={"arch": cfg.arch_id})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored = ckpt.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert jnp.array_equal(a, b)
+
+
+def test_schedules():
+    for make in (schedules.warmup_cosine, schedules.one_cycle, schedules.wsd):
+        f = make(1e-3, 100)
+        vals = np.array([float(f(s)) for s in range(1, 101)])
+        assert vals.max() <= 1e-3 + 1e-9
+        assert vals.min() >= 0
+        assert vals.argmax() < 50  # peak in first half
+
+
+def test_grad_compress_lossy_but_bounded():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    q = grad_compress.quantize_int8(g)
+    err = float(jnp.max(jnp.abs(q["w"] - g["w"])))
+    assert 0 < err < float(jnp.max(jnp.abs(g["w"]))) / 64
+    lr = grad_compress.lowrank(g, rank=4)
+    assert lr["w"].shape == g["w"].shape
+    # rank-4 approx of a random matrix loses energy
+    assert float(jnp.linalg.norm(lr["w"])) < float(jnp.linalg.norm(g["w"]))
+    assert grad_compress.compressed_bytes(g, "int8") < \
+        grad_compress.compressed_bytes(g, "none")
+
+
+def test_continuous_batcher_end_to_end():
+    cfg = tiny_cfg(connection="fal")
+    from repro.models import model as M
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ContinuousBatcher(cfg, params, batch_slots=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 5),
+                    max_new=4 + i) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.generated) >= r.max_new
+        assert all(0 <= t < cfg.vocab for t in r.generated)
+
+
+def test_batcher_matches_sequential_decode():
+    """Continuous batching must produce the same tokens as a lone request."""
+    cfg = tiny_cfg(connection="fal")
+    from repro.models import model as M
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(1, 7) % cfg.vocab
+
+    eng1 = ContinuousBatcher(cfg, params, batch_slots=1, max_seq=32)
+    eng1.submit(Request(rid=0, prompt=prompt, max_new=5))
+    ref = eng1.run()[0].generated
+
+    eng2 = ContinuousBatcher(cfg, params, batch_slots=2, max_seq=32)
+    eng2.submit(Request(rid=0, prompt=prompt, max_new=5))
+    eng2.submit(Request(rid=1, prompt=prompt[::-1].copy(), max_new=7))
+    out = {r.rid: r.generated for r in eng2.run()}
+    assert out[0] == ref
