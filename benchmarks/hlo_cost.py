@@ -138,16 +138,24 @@ def _trip_count(cond_comp: Computation):
 
 def _dot_flops(ins: Instr, comp: Computation):
     """FLOPs = 2 * prod(result dims) * prod(lhs contracting dims).
-    Operands are name references; shapes resolved via the computation's
-    symbol table."""
+
+    The lhs operand is either inline-typed ("dot(f32[4,128]{1,0} %x, ...)",
+    newer XLA text) — parse the shape directly — or a bare name reference
+    ("dot(%x, ...)") resolved via the computation's symbol table."""
     line = ins.line
-    m_ops = re.search(r"\b(?:dot|convolution)\(([^)]*)\)", line)
+    m_ops = re.search(r"\b(?:dot|convolution)\(\s*([^)]*)\)", line)
     if not m_ops:
         return 0
-    operands = [o.strip().lstrip("%") for o in m_ops.group(1).split(",")]
-    if not operands:
-        return 0
-    lhs = comp.symbols.get(operands[0])
+    ops_str = m_ops.group(1)
+    lhs = None
+    m_shape = _SHAPE_RE.match(ops_str)
+    if m_shape and m_shape.group(1) in _DT_BYTES:
+        dims = [int(x) for x in m_shape.group(2).split(",") if x] or [1]
+        lhs = (m_shape.group(1), dims)
+    else:
+        m_name = re.match(r"%?([\w\.\-]+)", ops_str)
+        if m_name:
+            lhs = comp.symbols.get(m_name.group(1))
     if lhs is None:
         return 0
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)

@@ -25,7 +25,7 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     from benchmarks import (bench_comm, bench_inference, bench_motivation,
-                            bench_quality, bench_throughput)
+                            bench_quality, bench_serving, bench_throughput)
 
     steps = 300 if args.full else 100
     suites = {
@@ -38,6 +38,7 @@ def main() -> None:
             csv, steps=max(steps * 2 // 3, 50)),
         "motivation": lambda: bench_motivation.bench(csv, steps=steps),
         "inference": lambda: bench_inference.bench(csv),
+        "serving": lambda: bench_serving.bench(csv),
     }
     failures = 0
     for name, fn in suites.items():

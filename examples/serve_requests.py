@@ -1,6 +1,7 @@
-"""Serving example: continuous-batching engine over a FAL model — submits a
-ragged stream of requests, drains them through fixed batch slots, and
-verifies batched outputs match lone-request decoding.
+"""Serving example: the paged continuous-batching engine over a FAL model —
+submits a ragged stream of requests, drains them through fixed batch slots
+with chunked batched prefill + paged KV cache, and verifies batched outputs
+match lone-request decoding.
 
 Run:  PYTHONPATH=src python examples/serve_requests.py
 """
@@ -11,31 +12,38 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import model as M
-from repro.serve.decode import ContinuousBatcher, Request
+from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
 
 cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
 params = M.init_params(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(42)
 
 # --- submit 10 ragged requests through 4 slots -----------------------------
-engine = ContinuousBatcher(cfg, params, batch_slots=4, max_seq=128)
-for i in range(10):
-    engine.submit(Request(rid=i,
-                          prompt=rng.integers(0, cfg.vocab, 4 + i % 7),
-                          max_new=8 + 3 * (i % 3)))
+ecfg = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
+                    max_seq=128)
+engine = PagedEngine(cfg, params, ecfg)
+prompts = [rng.integers(0, cfg.vocab, 4 + i % 7) for i in range(10)]
+for i, p in enumerate(prompts):
+    engine.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
 t0 = time.time()
 done = engine.run()
 dt = time.time() - t0
 total = sum(len(r.generated) for r in done)
+st = engine.stats()
 print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
-      f"({total/dt:.0f} tok/s)")
+      f"({total/dt:.0f} tok/s; {st['prefill_calls']} prefill + "
+      f"{st['decode_calls']} decode dispatches, "
+      f"peak pages {st['pages']['peak_in_use']}/{st['pages']['capacity']})")
 for r in sorted(done, key=lambda r: r.rid)[:3]:
     print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
 
 # --- correctness: batched == lone ------------------------------------------
-lone = ContinuousBatcher(cfg, params, batch_slots=1, max_seq=128)
+lone = PagedEngine(cfg, params, EngineConfig(page_size=8, num_pages=48,
+                                             slots=1, prefill_chunk=8,
+                                             max_seq=128))
 probe = sorted(done, key=lambda r: r.rid)[0]
-lone.submit(Request(rid=0, prompt=probe.prompt, max_new=len(probe.generated)))
+lone.submit(ServeRequest(rid=0, prompt=probe.prompt,
+                         max_new=len(probe.generated)))
 ref = lone.run()[0].generated
 assert ref == probe.generated, (ref, probe.generated)
 print("continuous batching == lone decoding ✓")

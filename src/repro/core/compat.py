@@ -1,0 +1,18 @@
+"""Version shims for the host framework.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to top-level ``jax.shard_map`` (kwarg ``check_vma``); this
+repo runs on both sides of the move.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

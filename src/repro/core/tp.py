@@ -16,6 +16,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compat import shard_map
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -142,7 +144,7 @@ def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model"):
             x, _ = jax.lax.scan(body, x, rest)
             return x
 
-        fn = jax.shard_map(local, mesh=mesh,
+        fn = shard_map(local, mesh=mesh,
                            in_specs=(wspec, P()), out_specs=P(),
                            check_vma=False)
         return fn(params, x)

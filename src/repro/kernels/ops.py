@@ -36,6 +36,21 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
     return blockwise_attention(q, k, v, causal=causal, block_q=block_q)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           use_pallas=None, interpret=False):
+    """Paged-KV decode attention: q (B,H,D) against (P,page,Hkv,D*) pools
+    addressed through (B,T) block tables.  Pallas kernel on TPU; gather-based
+    jnp oracle on CPU (identical numerics)."""
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                          seq_lens, interpret=interpret)
+    return _ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                    seq_lens)
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
                                              "interpret"))
 def fused_ln_add(x, a1n, scale, bias=None, *, kind="rmsnorm",

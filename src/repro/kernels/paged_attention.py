@@ -1,0 +1,118 @@
+"""Pallas TPU paged-attention decode kernel (GQA, block-table gather).
+
+One query token per request attends to its KV history stored in fixed-size
+pages scattered through (num_pages, page_size, Hkv, D) pools.  The block
+table and per-request sequence lengths ride in as scalar-prefetch operands
+(``PrefetchScalarGridSpec``): the K/V BlockSpec index maps read the block
+table directly, so each grid step DMAs exactly one physical page into VMEM —
+no gathered (B, T*page) copy is ever materialised in HBM.
+
+Grid: (B, Hkv, T) with T sequential (TPU grids execute in order); the G
+query heads sharing a kv head are processed together as a (G, D) tile so
+the page matmuls hit the MXU.  Online-softmax running max/denominator/
+accumulator live in VMEM scratch, carried across the T page steps; pages
+whose first slot is at/beyond seq_len are skipped with ``pl.when``.
+
+Target: TPU.  Validated with ``interpret=True`` on CPU against
+``repro.kernels.ref.paged_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, page_size):
+    b = pl.program_id(0)
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = sl_ref[b]
+    k_start = it * page_size          # logical position of this page's slot 0
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < seq_len, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (G,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # skip pages entirely past the request's history
+    pl.when(k_start < seq_len)(_body)
+
+    @pl.when(it == nt - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           scale=None, interpret=False):
+    """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D*);
+    block_tables: (B, T) int32; seq_lens: (B,) int32 -> (B, H, Dv)."""
+    B, H, D = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    G = H // Hkv
+    T = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+
+    qg = q.reshape(B, Hkv, G, D)
+    kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, t, bt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, Dv),
+                         lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv),
+                               lambda b, h, t, bt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=page)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      qg, kt, vt)
+    return out.reshape(B, H, Dv)

@@ -23,6 +23,33 @@ def attention_ref(q, k, v, *, causal=True, scale=None):
     return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
+                        scale=None):
+    """Paged-KV decode attention oracle (gather-based).
+
+    q: (B, H, D) one query token per request;
+    k_pages/v_pages: (P, page_size, Hkv, D*) pools;
+    block_tables: (B, T) int32 logical-block -> physical-page;
+    seq_lens: (B,) valid keys per request (gathered index < seq_len).
+    Returns (B, H, Dv).
+    """
+    B, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    k = k_pages[block_tables]                     # (B, T, page, Hkv, D)
+    k = k.reshape(B, -1, Hkv, D)
+    v = v_pages[block_tables].reshape(B, -1, Hkv, v_pages.shape[-1])
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(k.shape[1])[None] < seq_lens[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
 def ln_add_ref(x, a1n, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
     xf = x.astype(jnp.float32)
     if kind == "layernorm":

@@ -92,6 +92,8 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<=0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     info = {
         "arch": arch, "shape": shape_name,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),

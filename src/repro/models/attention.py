@@ -93,6 +93,106 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, cap=0.0,
 
 
 # ------------------------------------------------------------------------- #
+# paged KV cache (serving engine)
+# ------------------------------------------------------------------------- #
+# The serving engine stores KV state in fixed-size pages: a pool shaped
+# (num_pages, page_size, ...) plus a per-request block table mapping logical
+# block j (positions j*page_size .. (j+1)*page_size - 1) to a physical page.
+# Page 0 is a scratch page owned by no request: masked lanes of padded
+# prefill chunks are redirected there, so ragged batches never corrupt live
+# pages.  Writes are idempotent per (request, position) — re-decoding the
+# same position overwrites the same slot (the engine relies on this for
+# preemption -> resume).
+
+
+def paged_scatter(pages, vals, block_tables, pos, n_valid, page_size):
+    """Write a (B, C, ...) chunk of per-token values into the page pool.
+
+    pages: (P, page_size, ...); vals: (B, C, ...); block_tables: (B, T);
+    pos: (B,) logical position of each request's first chunk token;
+    n_valid: (B,) number of valid tokens in the chunk (rest -> scratch page).
+    """
+    B, C = vals.shape[:2]
+    T = block_tables.shape[1]
+    lpos = pos[:, None] + jnp.arange(C)[None]                     # (B, C)
+    blk = jnp.clip(lpos // page_size, 0, T - 1)
+    pg = jnp.take_along_axis(block_tables, blk, axis=1)           # (B, C)
+    valid = jnp.arange(C)[None] < n_valid[:, None]
+    pg = jnp.where(valid, pg, 0)                                  # scratch
+    flat_idx = (pg * page_size + lpos % page_size).reshape(-1)
+    flat = pages.reshape((pages.shape[0] * page_size,) + pages.shape[2:])
+    flat = flat.at[flat_idx].set(
+        vals.reshape((B * C,) + vals.shape[2:]).astype(pages.dtype))
+    return flat.reshape(pages.shape)
+
+
+def paged_gather(pages, block_tables):
+    """(P, page_size, ...) x (B, T) -> (B, T*page_size, ...): the request's
+    logical KV sequence (gathered index == logical position)."""
+    g = pages[block_tables]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def chunk_attention(q, k, v, q_pos, *, window=0, cap=0.0, scale=None):
+    """Multi-token attention against a gathered cache with per-request
+    positions (chunked prefill / paged decode).
+
+    q: (B, C, H, Dh); k, v: (B, Sk, Hkv, D*); q_pos: (B, C) global position
+    of each query token.  Key at gathered index j is visible iff j <= q_pos.
+    """
+    B, C, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, C, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = L.softcap(s, cap)
+    k_pos = jnp.arange(Sk)[None, None]                            # (1,1,Sk)
+    mask = k_pos <= q_pos[:, :, None]
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window)
+        mask &= (k_pos > q_pos[:, :, None] - w) | (w <= 0)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, C, H, v.shape[-1])
+
+
+def gqa_init_paged_cache(cfg, num_pages, page_size, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_pages, page_size, Hkv, Dh), jnp.dtype(dtype)),
+        "v": jnp.zeros((num_pages, page_size, Hkv, Dh), jnp.dtype(dtype)),
+    }
+
+
+def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
+                    window=0):
+    """Chunked decode/prefill against a paged cache.  x: (B, C, D) with C >= 1
+    (C == 1 is a decode tick).  Returns (out (B,C,D), new_cache)."""
+    B, C = x.shape[:2]
+    page = cache["k"].shape[1]
+    positions = pos[:, None] + jnp.arange(C)[None]
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    kc = paged_scatter(cache["k"], k, block_tables, pos, n_valid, page)
+    vc = paged_scatter(cache["v"], v, block_tables, pos, n_valid, page)
+    if C == 1 and cfg.attn_softcap == 0.0 \
+            and isinstance(window, int) and window == 0:
+        # single-token full-attention tick: the paged-attention kernel path
+        # (Pallas on TPU, gather-free ref on CPU) — avoids materialising the
+        # gathered (B, T*page) copies below
+        from repro.kernels import ops
+        o = ops.paged_decode_attention(q[:, 0], kc, vc, block_tables,
+                                       pos + 1)[:, None]
+    else:
+        o = chunk_attention(q, paged_gather(kc, block_tables),
+                            paged_gather(vc, block_tables), positions,
+                            window=window, cap=cfg.attn_softcap)
+    return o.reshape(B, C, -1) @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}
+
+
+# ------------------------------------------------------------------------- #
 # GQA module
 # ------------------------------------------------------------------------- #
 def gqa_init(key, cfg, cross=False):
@@ -152,12 +252,13 @@ def sequence_parallel_attention(q, k, v, cfg, pctx, *, causal=True,
             cap=cfg.attn_softcap, block_q=min(cfg.attn_block_q, S // M),
             q_offset=off)
 
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(dax, max_, None, None),
-                                 P(dax, None, None, None),
-                                 P(dax, None, None, None), P()),
-                       out_specs=P(dax, max_, None, None),
-                       check_vma=False)
+    from repro.core.compat import shard_map
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(dax, max_, None, None),
+                             P(dax, None, None, None),
+                             P(dax, None, None, None), P()),
+                   out_specs=P(dax, max_, None, None),
+                   check_vma=False)
     # window may be a traced per-layer scalar (scan xs) — pass explicitly
     return fn(q, k, v, jnp.asarray(window, jnp.int32))
 
@@ -310,3 +411,43 @@ def mla_decode(p, cfg, x, cache, pos):
     w_uv = p["w_uv"].astype(x.dtype).reshape(rkv, H, dv)
     o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv).reshape(B, 1, H * dv)
     return o @ p["wo"].astype(x.dtype), {"c": cc, "kr": krc}
+
+
+def mla_init_paged_cache(cfg, num_pages, page_size, dtype):
+    return {
+        "c": jnp.zeros((num_pages, page_size, cfg.kv_lora_rank),
+                       jnp.dtype(dtype)),
+        "kr": jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim),
+                        jnp.dtype(dtype)),
+    }
+
+
+def mla_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid):
+    """Chunked absorbed-matrix MLA decode against paged (c, k_rope) pages.
+    x: (B, C, D); returns (out (B,C,D), new_cache)."""
+    B, C = x.shape[:2]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    page = cache["c"].shape[1]
+    positions = pos[:, None] + jnp.arange(C)[None]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)            # (B,C,H,dn/dr)
+    c, kr = _mla_ckv(p, cfg, x, positions)                   # (B,C,rkv/dr)
+    c_pool = paged_scatter(cache["c"], c, block_tables, pos, n_valid, page)
+    kr_pool = paged_scatter(cache["kr"], kr, block_tables, pos, n_valid, page)
+    cc = paged_gather(c_pool, block_tables)                  # (B,Sk,rkv)
+    krc = paged_gather(kr_pool, block_tables)                # (B,Sk,dr)
+    w_uk = p["w_uk"].astype(x.dtype).reshape(rkv, H, dn)
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope, w_uk)       # (B,C,H,rkv)
+    s = jnp.einsum("bchr,bkr->bhck", q_lat, cc,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bchd,bkd->bhck", q_rope, krc,
+                    preferred_element_type=jnp.float32)
+    s *= (dn + dr) ** -0.5
+    mask = jnp.arange(cc.shape[1])[None, None] <= positions[:, :, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhck,bkr->bchr", pattn.astype(cc.dtype), cc)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(rkv, H, dv)
+    o = jnp.einsum("bchr,rhd->bchd", o_lat, w_uv).reshape(B, C, H * dv)
+    return o @ p["wo"].astype(x.dtype), {"c": c_pool, "kr": kr_pool}

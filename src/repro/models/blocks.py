@@ -59,15 +59,26 @@ def _ffn_apply(p, cfg, h, kind, parallel_ctx, mode):
 
 def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
                 is_block0=False, parallel_ctx=None, mode="train",
-                enc_out=None, cache=None, pos=None, causal=True):
-    """One block, full-sequence (train/prefill) or single-token decode.
+                enc_out=None, cache=None, pos=None, causal=True,
+                block_tables=None, n_valid=None):
+    """One block, full-sequence (train/prefill), single-token decode, or
+    chunked paged decode/prefill (mode='paged': x is (B, C, D), ``cache`` a
+    page pool, ``block_tables``/``n_valid`` the paged-serving metadata).
 
     Returns (x_out, a_raw, aux, new_cache).  ``a_raw`` is this block's MHA
     output (block 0 exports it as the first-attention signal).
     """
     h = L.norm_apply(p["ln1"], x, cfg.norm)
     new_cache = None
-    if mode == "decode":
+    if mode == "paged":
+        if cfg.use_mla:
+            a, new_cache = A.mla_paged_apply(p["attn"], cfg, h, cache,
+                                             block_tables, pos, n_valid)
+        else:
+            a, new_cache = A.gqa_paged_apply(p["attn"], cfg, h, cache,
+                                             block_tables, pos, n_valid,
+                                             window=window)
+    elif mode == "decode":
         if cfg.use_mla:
             a, new_cache = A.mla_decode(p["attn"], cfg, h, cache, pos)
         else:

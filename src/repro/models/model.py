@@ -192,9 +192,50 @@ def _decoder_init_cache(p, cfg, batch, seq, dtype):
     return {"block0": c0, "blocks": stacked}
 
 
+def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache, mode,
+                         parallel_ctx, block_tables=None, n_valid=None):
+    """Scan the stacked post-block0 layers in dense/moe segments over
+    per-layer caches (dense+moe kinds share attention caches; the ffn kind
+    switch is static per segment).  Returns (x, new_stacked_cache).
+
+    When every layer's window is statically 0 (no sliding windows) the
+    window rides into the scan body as a Python int instead of a traced
+    vector — attention's static ``window == 0`` checks then hold, keeping
+    the paged single-token fast path (kernels.ops.paged_decode_attention)
+    live for the stacked layers, not just block 0."""
+    wsched = BL.window_schedule(cfg)[1:]
+    static_zero = all(isinstance(w, int) and w == 0 for w in wsched)
+    ws_all = jnp.asarray(wsched, jnp.int32)
+    i = 0
+    seg_caches = []
+    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
+        if name in p and p[name] is not None:
+            n = jax.tree.leaves(p[name])[0].shape[0]
+            ws = None if static_zero else jax.lax.slice_in_dim(ws_all, i, i + n)
+            cache_seg = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, i, i + n), blocks_cache)
+
+            def body(h, xs, kind=kind):
+                if static_zero:
+                    (pb, ci), w = xs, 0
+                else:
+                    pb, w, ci = xs
+                h, _, _, c_new = BL.block_apply(
+                    pb, cfg, h, a1_sig, None, w, kind=kind, mode=mode,
+                    cache=ci, pos=pos, block_tables=block_tables,
+                    n_valid=n_valid, parallel_ctx=parallel_ctx)
+                return h, c_new
+
+            xs = (p[name], cache_seg) if static_zero else \
+                (p[name], ws, cache_seg)
+            x, cseg = jax.lax.scan(body, x, xs)
+            seg_caches.append(cseg)
+            i += n
+    return x, jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *seg_caches)
+
+
 def _decoder_decode(p, cfg, batch, cache, parallel_ctx=None):
     tokens, pos = batch["tokens"], batch["pos"]
-    B = tokens.shape[0]
     positions = pos[:, None]
     x = _embed_tokens(p, cfg, tokens, positions)
     if cfg.n_image_tokens and "image_embeds" in batch:
@@ -210,38 +251,77 @@ def _decoder_decode(p, cfg, batch, cache, parallel_ctx=None):
         cache=cache["block0"], pos=pos, parallel_ctx=parallel_ctx)
     a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
 
-    # single stacked scan over remaining layers (dense+moe kinds share
-    # attention caches; the ffn kind switch is static per segment)
-    new_caches = {"block0": c0}
-    ws_all = jnp.asarray(wsched[1:], jnp.int32)
-    i = 0
-    seg_caches = []
-    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
-        if name in p and p[name] is not None:
-            n = jax.tree.leaves(p[name])[0].shape[0]
-            ws = jax.lax.slice_in_dim(ws_all, i, i + n)
-            cache_seg = jax.tree.map(
-                lambda a: jax.lax.slice_in_dim(a, i, i + n), cache["blocks"])
+    x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
+                                         cache["blocks"], "decode",
+                                         parallel_ctx)
+    logits = _logits(p, cfg, x)
+    return logits, {"block0": c0, "blocks": blocks_new}
 
-            def body(h, xs, kind=kind):
-                pb, w, ci = xs
-                h, _, _, c_new = BL.block_apply(
-                    pb, cfg, h, a1_sig, None, w, kind=kind, mode="decode",
-                    cache=ci, pos=pos, parallel_ctx=parallel_ctx)
-                return h, c_new
 
-            x, cseg = jax.lax.scan(body, x, (p[name], ws, cache_seg))
-            seg_caches.append(cseg)
-            i += n
-    new_caches["blocks"] = jax.tree.map(
-        lambda *xs: jnp.concatenate(xs, 0), *seg_caches)
+# ------------------------------------------------------------------------- #
+# paged decode (serving engine): block-table KV cache, chunked ticks
+# ------------------------------------------------------------------------- #
+def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype):
+    mk = (A.mla_init_paged_cache if cfg.use_mla else A.gqa_init_paged_cache)
+    c0 = mk(cfg, num_pages, page_size, dtype)
+    rest = cfg.n_layers - 1
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (rest,) + a.shape), c0)
+    return {
+        "block0": c0, "blocks": stacked,
+        # per-slot FAL export: block 1's first-attention signal at the last
+        # position this slot processed.  Written every paged tick so engine
+        # consumers (telemetry, the fal-mode MHA||MLP dispatch) read the
+        # cached tensor instead of re-running block 1's export.
+        "a1_sig": jnp.zeros((slots, cfg.d_model), jnp.dtype(dtype)),
+    }
+
+
+def _decoder_paged_decode(p, cfg, batch, cache, parallel_ctx=None):
+    """Chunked paged tick: C >= 1 tokens per request against page pools.
+
+    batch: tokens (B, C), pos (B,) first logical position, n_valid (B,)
+    valid tokens per request (invalid lanes -> scratch page), block_tables
+    (B, T).  Returns (logits (B, C, V), new_cache).  C == 1 is a decode
+    tick; C > 1 a chunked-prefill tick — one jitted program each.
+    """
+    tokens, pos = batch["tokens"], batch["pos"]
+    bt, n_valid = batch["block_tables"], batch["n_valid"]
+    B, C = tokens.shape
+    positions = pos[:, None] + jnp.arange(C)[None]
+    x = _embed_tokens(p, cfg, tokens, positions)
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        # VLM: patch embeddings for the chunk lanes inside the image prefix
+        # (same contract as _decoder_decode, lane-wise over the chunk)
+        x = jnp.where((positions < cfg.n_image_tokens)[:, :, None],
+                      batch["image_embeds"].astype(x.dtype), x)
+    x = constrain_batch(x, parallel_ctx)
+    wsched = BL.window_schedule(cfg)
+
+    x, a1_raw, _, c0 = BL.block_apply(
+        p["block0"], cfg, x, None, positions, wsched[0],
+        kind=_layer_kind(cfg, 0), is_block0=True, mode="paged",
+        cache=cache["block0"], pos=pos, block_tables=bt, n_valid=n_valid,
+        parallel_ctx=parallel_ctx)
+    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+
+    x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
+                                         cache["blocks"], "paged",
+                                         parallel_ctx, block_tables=bt,
+                                         n_valid=n_valid)
+    new_caches = {"block0": c0, "blocks": blocks_new}
+
+    # stash the per-request FAL export at each request's last valid position;
+    # slots sitting this call out (n_valid == 0) keep their cached signal
+    sig = a1_sig if a1_sig is not None else a1_raw
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    new_sig = jnp.take_along_axis(
+        sig, last[:, None, None], axis=1)[:, 0].astype(cache["a1_sig"].dtype)
+    new_caches["a1_sig"] = jnp.where((n_valid > 0)[:, None], new_sig,
+                                     cache["a1_sig"])
+
     logits = _logits(p, cfg, x)
     return logits, new_caches
-
-
-# ------------------------------------------------------------------------- #
-# MambaLM (ssm)
-# ------------------------------------------------------------------------- #
 def _mamba_block_init(key, cfg):
     k1, k2 = jax.random.split(key)
     return {"ln": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
@@ -604,6 +684,28 @@ def decode_step(params, cfg, batch, cache, parallel_ctx=None):
     fn = {"ssm": _mamba_decode, "hybrid": _zamba_decode,
           "audio": _whisper_decode}.get(cfg.family, _decoder_decode)
     return fn(params, cfg, batch, cache, parallel_ctx)
+
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16"):
+    """Paged-KV cache for the decoder family: (num_pages, page_size, ...)
+    pools per layer + a per-slot FAL-signal buffer.  Page 0 is scratch
+    (see attention.paged_scatter)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache: decoder family only, got {cfg.family}")
+    return _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype)
+
+
+def paged_decode_step(params, cfg, batch, cache, parallel_ctx=None):
+    """Chunked paged tick -> (logits (B,C,V), new_cache).  See
+    ``_decoder_paged_decode`` for the batch contract."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged decode: decoder family only, got {cfg.family}")
+    return _decoder_paged_decode(params, cfg, batch, cache, parallel_ctx)
 
 
 def _mtp_loss(p, cfg, batch, hidden):

@@ -31,10 +31,10 @@ def make_serve_step(cfg, parallel_ctx=None):
     return serve_step
 
 
-def make_prefill_then_decode(cfg):
+def make_prefill_then_decode(cfg, parallel_ctx=None):
     """Prefill via repeated decode steps (teacher-forcing the prompt into the
     cache) then greedy decode.  Used by examples/serve_requests.py."""
-    serve_step = jax.jit(make_serve_step(cfg))
+    serve_step = jax.jit(make_serve_step(cfg, parallel_ctx))
 
     def generate(params, prompts: np.ndarray, max_new: int, cache):
         B, P = prompts.shape
@@ -69,12 +69,12 @@ class ContinuousBatcher:
     vector the decode kernels consume."""
 
     def __init__(self, cfg, params, batch_slots: int, max_seq: int,
-                 cache_dtype="float32"):
+                 cache_dtype="float32", parallel_ctx=None):
         self.cfg, self.params = cfg, params
         self.B = batch_slots
         self.max_seq = max_seq
         self.cache = M.init_cache(cfg, batch_slots, max_seq, cache_dtype)
-        self.serve_step = jax.jit(make_serve_step(cfg))
+        self.serve_step = jax.jit(make_serve_step(cfg, parallel_ctx))
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
 

@@ -1,0 +1,115 @@
+"""Host-side paged-KV bookkeeping: fixed-size pages, per-request block
+tables, alloc/free/fragmentation stats.
+
+The device arrays live in the model cache (``model.init_paged_cache``); this
+module owns WHICH physical page each logical block of each request maps to.
+Page 0 is a scratch page owned by no request — masked lanes of padded
+prefill chunks are redirected there (attention.paged_scatter), so it is
+never handed out by the allocator.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return max(0, -(-n_tokens // page_size))
+
+
+class PageAllocator:
+    """Free-list allocator over pages 1..num_pages-1 (page 0 = scratch)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "need >= 1 allocatable page + scratch page 0"
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.n_allocs = 0
+        self.n_frees = 0
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if the pool can't cover them (no partial grabs)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.n_allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for pg in pages:
+            assert 0 < pg < self.num_pages, pg
+        self._free.extend(pages)
+        self.n_frees += len(pages)
+
+    def stats(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "in_use": self.in_use,
+            "free": self.free_pages,
+            "peak_in_use": self.peak_in_use,
+            "allocs": self.n_allocs,
+            "frees": self.n_frees,
+            "utilization": self.in_use / max(self.capacity, 1),
+        }
+
+
+class BlockTable:
+    """Per-request logical-block -> physical-page map."""
+
+    def __init__(self, allocator: PageAllocator, max_blocks: int):
+        self.alloc = allocator
+        self.max_blocks = max_blocks
+        self.pages: List[int] = []
+
+    def ensure(self, seq_len: int) -> bool:
+        """Grow to cover ``seq_len`` tokens.  All-or-nothing: on failure the
+        table is unchanged and the caller decides (preempt / queue)."""
+        need = pages_needed(seq_len, self.alloc.page_size)
+        if need > self.max_blocks:
+            return False
+        grow = need - len(self.pages)
+        if grow <= 0:
+            return True
+        got = self.alloc.alloc(grow)
+        if got is None:
+            return False
+        self.pages.extend(got)
+        return True
+
+    def release(self) -> None:
+        if self.pages:
+            self.alloc.free(self.pages)
+            self.pages = []
+
+    def as_row(self, width: Optional[int] = None) -> np.ndarray:
+        """Padded int32 row for the device block-table tensor (pad = scratch
+        page 0; positions there are never read thanks to the seq-len mask)."""
+        width = self.max_blocks if width is None else width
+        row = np.zeros((width,), np.int32)
+        row[:len(self.pages)] = self.pages
+        return row
+
+    def internal_fragmentation(self, seq_len: int) -> int:
+        """Allocated-but-unused KV slots (the defrag metric: pages are fixed
+        size, so the only fragmentation a paged cache suffers is the unused
+        tail of each request's last page)."""
+        return len(self.pages) * self.alloc.page_size - seq_len

@@ -1,0 +1,68 @@
+"""Chunked **batched** prefill for the paged engine.
+
+The seed engine teacher-forced prompts one token per engine tick — one jit
+dispatch per prompt token, with every decode-phase request stalled behind
+it.  Here a prefill tick jits ONE multi-token forward over a (B, chunk)
+window: every prefilling request advances up to ``chunk`` positions per
+dispatch, and since a decode tick is the same program at chunk == 1
+(``model.paged_decode_step``), the engine compiles exactly two XLA programs
+regardless of prompt raggedness — (B, chunk) and (B, 1).
+
+Requests with fewer remaining tokens than the chunk width ride along with
+``n_valid < chunk``; their padded lanes scatter to the scratch page and
+their padded logits are never read.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serve import sampling as SP
+
+
+def make_paged_step(cfg, parallel_ctx=None):
+    """Jitted paged tick: (params, cache, tokens (B,C), pos (B,),
+    n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
+    sample_pos) -> (logits (B,C,V), next_tokens (B,), new_cache).
+
+    One returned callable serves both phases: call it with C == chunk for
+    prefill ticks and C == 1 for decode ticks (two traces, cached by shape).
+    Sampling is fused into the program (one dispatch per tick) and the cache
+    buffers are donated, so page pools update in place instead of being
+    copied every tick.
+    """
+
+    def step(params, cache, tokens, pos, n_valid, block_tables,
+             temps, top_ks, top_ps, seeds, sample_pos):
+        batch = {"tokens": tokens, "pos": pos, "n_valid": n_valid,
+                 "block_tables": block_tables}
+        logits, new_cache = M.paged_decode_step(params, cfg, batch, cache,
+                                                parallel_ctx)
+        nxt = jax.vmap(SP.sample_one)(
+            last_valid_logits(logits, n_valid), temps, top_ks, top_ps,
+            seeds, sample_pos)
+        return logits, nxt, new_cache
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def last_valid_logits(logits, n_valid):
+    """(B, C, V), (B,) -> (B, V): each request's logits at its last valid
+    chunk lane (lane 0 for requests that sat out the tick)."""
+    last = jnp.clip(n_valid - 1, 0, logits.shape[1] - 1)
+    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+
+
+def pack_chunks(token_lists, chunk, slots):
+    """Host-side chunk packing: per-slot lists of pending context tokens ->
+    (tokens (slots, chunk), n_valid (slots,)) numpy arrays.  Empty lists
+    (decode-phase or idle slots) get n_valid == 0."""
+    toks = np.zeros((slots, chunk), np.int32)
+    n_valid = np.zeros((slots,), np.int32)
+    for i, lst in enumerate(token_lists):
+        n = min(len(lst), chunk)
+        toks[i, :n] = lst[:n]
+        n_valid[i] = n
+    return toks, n_valid

@@ -1,0 +1,70 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k /
+top-p, seeded per request.
+
+One jitted kernel samples the whole batch with per-request parameters
+(temperature == 0 -> greedy; top_k == 0 and top_p >= 1 -> disabled), so
+heterogeneous sampling configs share a single dispatch per tick.  Keys are
+derived as ``fold_in(PRNGKey(seed), position)`` — a pure function of
+(request seed, token position) — which makes generation replayable: a
+preempted request that re-prefills its context and resumes sampling at the
+same positions draws the same tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0          # 0 -> greedy (argmax)
+    top_k: int = 0                    # 0 -> disabled
+    top_p: float = 1.0                # >= 1 -> disabled
+    seed: int = 0
+
+    @staticmethod
+    def greedy() -> "SamplingParams":
+        return SamplingParams()
+
+
+def _mask_top_k(logits, k):
+    """Keep the k highest logits (k <= 0 disables)."""
+    V = logits.shape[-1]
+    srt = jnp.sort(logits)[::-1]
+    kk = jnp.where(k <= 0, V, k)
+    thr = srt[jnp.clip(kk - 1, 0, V - 1)]
+    return jnp.where(logits >= thr, logits, -jnp.inf)
+
+def _mask_top_p(logits, p):
+    """Nucleus: keep the smallest prefix of the sorted distribution with
+    mass >= p (p >= 1 disables)."""
+    probs = jax.nn.softmax(logits)
+    sp = jnp.sort(probs)[::-1]
+    cs = jnp.cumsum(sp)
+    idx = jnp.argmax(cs >= p)            # first sorted index reaching mass p
+    thr = sp[idx]
+    keep = (probs >= thr) | (p >= 1.0)
+    return jnp.where(keep, logits, -jnp.inf)
+
+
+def _sample_one(logits, temp, top_k, top_p, seed, pos):
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, -1)
+    lg = _mask_top_k(logits, top_k)
+    lg = _mask_top_p(lg, top_p)
+    lg = lg / jnp.maximum(temp, 1e-6)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+    g = -jnp.log(-jnp.log(jax.random.uniform(
+        key, logits.shape, minval=1e-20, maxval=1.0)))
+    sampled = jnp.argmax(lg + g, -1)
+    return jnp.where(temp <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+# one request; composable into larger jitted programs (serve/prefill.py)
+sample_one = _sample_one
+
+# sample_tokens(logits (B,V), temps (B,), top_ks (B,), top_ps (B,),
+#               seeds (B,), positions (B,)) -> (B,) int32
+sample_tokens = jax.jit(jax.vmap(_sample_one))

@@ -1,0 +1,303 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+Replaces the seed's fixed contiguous (B, max_seq) cache + one-token-per-tick
+engine with:
+
+  * admission control — a request enters a slot only when the page pool can
+    cover its context (policy 'prompt': prompt + 1 token; 'full': prompt +
+    max_new, no-preemption reservation);
+  * chunked batched prefill — prefilling slots advance up to
+    ``prefill_chunk`` positions per jit dispatch (serve/prefill.py);
+  * per-request seeded sampling (serve/sampling.py) batched into one
+    dispatch per engine call;
+  * preemption by page pressure — when a slot can't grow its block table,
+    the youngest other active request is evicted: its pages are released and
+    it is requeued (front).  On re-admission it re-prefills prompt +
+    already-generated tokens; (seed, position)-derived sampling keys make
+    the resumed continuation deterministic.
+
+The oldest active request can always claim pages from younger ones, so the
+engine makes progress whenever any single request fits the pool; requests
+that can never fit are rejected instead of deadlocking the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serve import prefill as PF
+from repro.serve import sampling as SP
+from repro.serve.paged_cache import BlockTable, PageAllocator, pages_needed
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                 # (P,) int token ids
+    max_new: int
+    sampling: SP.SamplingParams = SP.SamplingParams()
+    generated: list = dataclasses.field(default_factory=list)
+    pos: int = 0                       # tokens of context written to cache
+    done: bool = False
+    truncated: bool = False            # hit the context cap / rejected
+    preemptions: int = 0
+    arrival: int = -1                  # submit order (preemption priority)
+    submit_tick: int = -1
+    finish_tick: int = -1
+
+    def known(self) -> list:
+        """Context to teacher-force: prompt + everything sampled so far."""
+        return list(self.prompt) + self.generated
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Paged-engine knobs (see ROADMAP.md 'Serving')."""
+    page_size: int = 16
+    num_pages: int = 64                # pool size incl. scratch page 0
+    slots: int = 4                     # concurrent batch slots
+    prefill_chunk: int = 16            # tokens per prefill dispatch
+    max_seq: int = 256                 # per-request context cap
+    admission: str = "prompt"          # 'prompt' | 'full'
+    cache_dtype: str = "float32"
+
+
+class PagedEngine:
+    """Slot-based continuous batching over paged KV (decoder family)."""
+
+    def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
+                 parallel_ctx=None):
+        if cfg.family not in M.PAGED_FAMILIES:
+            raise NotImplementedError(cfg.family)
+        if cfg.n_image_tokens:
+            # model.paged_decode_step supports image_embeds, but the engine's
+            # request/step plumbing is text-only — refuse rather than serve
+            # image prefixes as text tokens (silently wrong logits)
+            raise NotImplementedError(
+                "PagedEngine serves text-only requests; vlm image prefixes "
+                "need image_embeds plumbed through ServeRequest")
+        assert engine_cfg.admission in ("prompt", "full"), engine_cfg.admission
+        self.cfg, self.params, self.ecfg = cfg, params, engine_cfg
+        self.max_blocks = pages_needed(engine_cfg.max_seq,
+                                       engine_cfg.page_size)
+        self.cache = M.init_paged_cache(
+            cfg, engine_cfg.num_pages, engine_cfg.page_size,
+            engine_cfg.slots, engine_cfg.cache_dtype)
+        self.step_fn = PF.make_paged_step(cfg, parallel_ctx)
+        self.allocator = PageAllocator(engine_cfg.num_pages,
+                                       engine_cfg.page_size)
+        self.tables = [BlockTable(self.allocator, self.max_blocks)
+                       for _ in range(engine_cfg.slots)]
+        self.slots: List[Optional[ServeRequest]] = [None] * engine_cfg.slots
+        self.queue: List[ServeRequest] = []
+        self.finished: List[ServeRequest] = []
+        self.ticks = 0
+        self.prefill_calls = self.decode_calls = 0
+        self.prefill_tokens = self.decode_tokens = 0
+        self.preemptions = self.rejected = 0
+        self._arrival = 0
+        self._util = []
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: ServeRequest):
+        req.arrival = self._arrival
+        self._arrival += 1
+        req.submit_tick = self.ticks
+        self.queue.append(req)
+
+    def _admission_pages(self, r: ServeRequest) -> int:
+        ctx = len(r.known())
+        ahead = ctx + (r.max_new - len(r.generated)) \
+            if self.ecfg.admission == "full" else ctx + 1
+        return pages_needed(min(ahead, self.ecfg.max_seq),
+                            self.ecfg.page_size)
+
+    def _reject(self, r: ServeRequest):
+        r.done = r.truncated = True
+        r.finish_tick = self.ticks
+        self.rejected += 1
+        self.finished.append(r)
+
+    def _admit(self):
+        while self.queue:
+            try:
+                free = self.slots.index(None)
+            except ValueError:
+                return
+            r = self.queue[0]
+            ctx = len(r.known())
+            need = self._admission_pages(r)
+            # requests that can never complete are rejected instead of
+            # deadlocking the queue (or livelocking the pool): the context
+            # must fit max_seq with room to sample at least one token, and
+            # its pages must fit the pool
+            if (ctx + 1 > self.ecfg.max_seq
+                    or need > min(self.max_blocks, self.allocator.capacity)):
+                self.queue.pop(0)
+                self._reject(r)
+                continue
+            if not self.allocator.can_alloc(need):
+                return                       # FCFS: no head-of-line skipping
+            self.queue.pop(0)
+            r.pos = 0                        # (re-)prefill from scratch
+            self.slots[free] = r
+            if self.ecfg.admission == "full":
+                # reservation policy: actually hold the worst-case pages now
+                # so this request can never be preempted for page pressure
+                ok = self.tables[free].ensure(
+                    min(ctx + r.max_new - len(r.generated),
+                        self.ecfg.max_seq))
+                assert ok                    # can_alloc(need) just passed
+
+    # ------------------------------------------------------------------ #
+    def _preempt(self, i: int):
+        r = self.slots[i]
+        self.tables[i].release()
+        r.pos = 0
+        r.preemptions += 1
+        self.preemptions += 1
+        self.slots[i] = None
+        self.queue.insert(0, r)              # front: resumes before new work
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        cands = [i for i, r in enumerate(self.slots)
+                 if r is not None and i != exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda i: self.slots[i].arrival)  # youngest
+
+    def _ensure(self, i: int, new_len: int) -> bool:
+        """Grow slot i's block table to cover new_len tokens, evicting
+        younger requests under page pressure.  False => slot i was itself
+        preempted (or finished truncated) and is gone."""
+        if pages_needed(new_len, self.ecfg.page_size) \
+                > min(self.max_blocks, self.allocator.capacity):
+            # infeasible no matter how many victims are evicted (would
+            # livelock the while-loop below): finish truncated instead
+            self._finish(i, truncated=True)
+            return False
+        while not self.tables[i].ensure(new_len):
+            victim = self._pick_victim(exclude=i)
+            if victim is None:
+                self._preempt(i)
+                return False
+            self._preempt(victim)
+        return True
+
+    def _finish(self, i: int, truncated: bool = False):
+        r = self.slots[i]
+        r.done = True
+        r.truncated = truncated
+        r.finish_tick = self.ticks
+        self.tables[i].release()
+        self.slots[i] = None
+        self.finished.append(r)
+
+    # ------------------------------------------------------------------ #
+    def _run_call(self, ids: List[int], chunk: int):
+        """One jitted engine call (forward + fused sampling) over the given
+        participating slots; consume samples for every request whose context
+        completed this call."""
+        B = self.ecfg.slots
+        lists = [self.slots[i].known()[self.slots[i].pos:
+                                       self.slots[i].pos + chunk]
+                 if i in ids else [] for i in range(B)]
+        toks, n_valid = PF.pack_chunks(lists, chunk, B)
+        pos = np.asarray([r.pos if r else 0 for r in self.slots], np.int32)
+        bt = np.stack([t.as_row() for t in self.tables])
+        temps = np.zeros((B,), np.float32)
+        ks = np.zeros((B,), np.int32)
+        ps = np.ones((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        poss = np.zeros((B,), np.int32)
+        for i in ids:
+            sp = self.slots[i].sampling
+            temps[i], ks[i], ps[i] = sp.temperature, sp.top_k, sp.top_p
+            seeds[i] = sp.seed
+            # position of the would-be new token (== len(known()) exactly
+            # when this call completes the request's context)
+            poss[i] = self.slots[i].pos + int(n_valid[i])
+        _, nxt, self.cache = self.step_fn(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(n_valid), jnp.asarray(bt), jnp.asarray(temps),
+            jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds),
+            jnp.asarray(poss))
+        for i in ids:
+            self.slots[i].pos += int(n_valid[i])
+        need = [i for i in ids
+                if self.slots[i].pos == len(self.slots[i].known())]
+        if need:
+            nxt_np = np.asarray(nxt)
+            for i in need:
+                r = self.slots[i]
+                r.generated.append(int(nxt_np[i]))
+                if len(r.generated) >= r.max_new:
+                    self._finish(i)
+                elif len(r.known()) >= self.ecfg.max_seq:
+                    self._finish(i, truncated=True)
+        return int(n_valid.sum())
+
+    # ------------------------------------------------------------------ #
+    def step(self):
+        """One engine tick: admit -> chunked prefill call -> decode call."""
+        self.ticks += 1
+        self._admit()
+
+        def remaining(r):
+            return len(r.known()) - r.pos
+
+        pre = [i for i, r in enumerate(self.slots)
+               if r is not None and remaining(r) > 1]
+        for i in list(pre):
+            r = self.slots[i]
+            feed = min(self.ecfg.prefill_chunk, remaining(r))
+            if not self._ensure(i, r.pos + feed):
+                pass                          # slot preempted/truncated
+        pre = [i for i, r in enumerate(self.slots)
+               if r is not None and remaining(r) > 1]
+        if pre:
+            self.prefill_calls += 1
+            self.prefill_tokens += self._run_call(pre, self.ecfg.prefill_chunk)
+
+        dec = [i for i, r in enumerate(self.slots)
+               if r is not None and remaining(r) == 1]
+        for i in list(dec):
+            if not self._ensure(i, self.slots[i].pos + 1):
+                pass
+        dec = [i for i, r in enumerate(self.slots)
+               if r is not None and remaining(r) == 1]
+        if dec:
+            self.decode_calls += 1
+            self.decode_tokens += self._run_call(dec, 1)
+
+        self._util.append(self.allocator.stats()["utilization"])
+
+    def run(self, max_ticks: Optional[int] = None) -> List[ServeRequest]:
+        while any(s is not None for s in self.slots) or self.queue:
+            if max_ticks is not None and self.ticks >= max_ticks:
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        frag = sum(self.tables[i].internal_fragmentation(self.slots[i].pos)
+                   for i in range(self.ecfg.slots)
+                   if self.slots[i] is not None)
+        return {
+            "ticks": self.ticks,
+            "prefill_calls": self.prefill_calls,
+            "decode_calls": self.decode_calls,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "preemptions": self.preemptions,
+            "rejected": self.rejected,
+            "mean_page_utilization": float(np.mean(self._util)) if self._util
+            else 0.0,
+            "internal_fragmentation": frag,
+            "pages": self.allocator.stats(),
+        }

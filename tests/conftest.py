@@ -12,6 +12,11 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running tests (mesh subprocesses, big sweeps)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

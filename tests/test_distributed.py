@@ -15,10 +15,13 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run_py(script, devices=8, timeout=600):
+    # JAX_PLATFORMS=cpu: on hosts with libtpu installed but no TPU attached,
+    # leaving the platform unset makes the subprocess hang on TPU-metadata
+    # probes and die; the forced host-device count only applies to CPU anyway
     env = dict(os.environ,
                XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=os.path.join(REPO, "src"))
-    env.pop("JAX_PLATFORMS", None)
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
     r = subprocess.run([sys.executable, "-c", script], env=env,
                        capture_output=True, text=True, timeout=timeout)
     assert r.returncode == 0, r.stderr[-3000:]

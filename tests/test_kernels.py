@@ -2,11 +2,13 @@
 pure-jnp oracles in repro.kernels.ref."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels import flash_attention as FA
 from repro.kernels import fused_ln_add as FL
 from repro.kernels import ops
+from repro.kernels import paged_attention as PA
 from repro.kernels import ref as R
 
 
@@ -71,6 +73,42 @@ def test_fused_ln_add_sweep(shape, kind, dtype):
     tol = 2e-5 if dtype == "float32" else 5e-2
     assert jnp.max(jnp.abs(out.astype(jnp.float32)
                            - ref.astype(jnp.float32))) < tol
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,page,T", [
+    (2, 4, 4, 32, 8, 4),     # MHA
+    (2, 8, 2, 64, 16, 3),    # GQA 4:1
+    (1, 4, 1, 32, 8, 5),     # MQA
+])
+def test_paged_attention_sweep(B, H, Hkv, D, page, T):
+    P = T * B + 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k_pages = jax.random.normal(ks[1], (P, page, Hkv, D))
+    v_pages = jax.random.normal(ks[2], (P, page, Hkv, D))
+    # distinct pages per request, ragged seq_lens incl. a page-boundary case
+    bt = jnp.asarray(np.arange(1, 1 + B * T).reshape(B, T), jnp.int32)
+    lens = [(T - 1) * page + 3, page, 1][:B]
+    sl = jnp.asarray(lens + [5] * (B - len(lens)), jnp.int32)
+    out = PA.paged_decode_attention(q, k_pages, v_pages, bt, sl,
+                                    interpret=True)
+    ref = R.paged_attention_ref(q, k_pages, v_pages, bt, sl)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+def test_paged_attention_ops_dispatch():
+    """CPU fallback (gather ref) == interpret-mode kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 4, 32))
+    k_pages = jax.random.normal(ks[1], (6, 8, 2, 32))
+    v_pages = jax.random.normal(ks[2], (6, 8, 2, 32))
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    sl = jnp.asarray([11, 7], jnp.int32)
+    a = ops.paged_decode_attention(q, k_pages, v_pages, bt, sl,
+                                   use_pallas=False)
+    b = ops.paged_decode_attention(q, k_pages, v_pages, bt, sl,
+                                   interpret=True)
+    assert jnp.max(jnp.abs(a - b)) < 2e-5
 
 
 def test_ops_dispatch_matches_model_attention():

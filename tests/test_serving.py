@@ -1,0 +1,284 @@
+"""Paged serving engine: paged decode == full forward, chunk-width
+invariance, FAL-signal caching, preemption->resume determinism, sampling
+reproducibility, and allocator bookkeeping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve import sampling as SP
+from repro.serve.paged_cache import BlockTable, PageAllocator, pages_needed
+from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+
+
+def _paged_logits(cfg, params, toks, chunk, page_size=8, num_pages=24):
+    """Drive paged_decode_step over ``toks`` in chunks; return all logits."""
+    B, S = toks.shape
+    T = pages_needed(S, page_size)
+    cache = M.init_paged_cache(cfg, num_pages, page_size, B, "float32")
+    bt = jnp.asarray(
+        np.arange(1, 1 + B * T, dtype=np.int32).reshape(B, T))
+    step = jax.jit(lambda b, c: M.paged_decode_step(params, cfg, b, c))
+    outs, t = [], 0
+    while t < S:
+        nv = min(chunk, S - t)
+        padded = np.zeros((B, chunk), np.int32)
+        padded[:, :nv] = np.asarray(toks[:, t:t + nv])
+        lg, cache = step({"tokens": jnp.asarray(padded),
+                          "pos": jnp.full((B,), t, jnp.int32),
+                          "n_valid": jnp.full((B,), nv, jnp.int32),
+                          "block_tables": bt}, cache)
+        outs.append(lg[:, :nv])
+        t += nv
+    return jnp.concatenate(outs, 1), cache
+
+
+PAGED_CASES = [("llama3.2-3b", "fal"),        # GQA, rope
+               ("deepseek-v3-671b", "fal"),   # MLA latent pages + MoE
+               ("gemma2-27b", "falplus"),     # sliding window + softcaps
+               ("qwen3-4b", "preln")]         # qk_norm baseline connection
+
+
+@pytest.mark.parametrize("arch,conn", PAGED_CASES)
+def test_paged_decode_matches_forward(arch, conn):
+    cfg = get_config(arch).reduced().replace(connection=conn)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _, _ = M.forward(params, cfg, {"tokens": toks}, "train")
+    dec, _ = _paged_logits(cfg, params, toks, chunk=5)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err < 2e-3, (arch, err)
+
+
+def test_paged_chunk_width_invariance():
+    """Chunked prefill must agree with one-token-per-tick paged decode."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 21), 0, cfg.vocab)
+    ref, cache1 = _paged_logits(cfg, params, toks, chunk=1)
+    for chunk in (4, 7, 21):
+        got, _ = _paged_logits(cfg, params, toks, chunk=chunk)
+        assert float(jnp.max(jnp.abs(got - ref))) < 1e-3, chunk
+
+
+def test_fal_signal_cached_per_request():
+    """The cache's per-slot a1_sig must be block 1's export at each
+    request's last processed position, consistent across tick widths."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    _, c_tok = _paged_logits(cfg, params, toks, chunk=1)
+    _, c_chunk = _paged_logits(cfg, params, toks, chunk=16)
+    assert float(jnp.max(jnp.abs(c_tok["a1_sig"]))) > 0
+    assert float(jnp.max(jnp.abs(c_tok["a1_sig"]
+                                 - c_chunk["a1_sig"]))) < 1e-4
+
+
+# --------------------------------------------------------------------------- #
+# engine
+# --------------------------------------------------------------------------- #
+def _cfg_params():
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(cfg, n=8, seed=1, **kw):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i, prompt=rng.integers(0, cfg.vocab, 4 + i % 7),
+                         max_new=6 + 3 * (i % 3), **kw) for i in range(n)]
+
+
+def test_engine_batched_equals_lone():
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=48, slots=4, prefill_chunk=8, max_seq=64))
+    for r in _reqs(cfg):
+        eng.submit(r)
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 8 and not any(r.truncated for r in done.values())
+
+    probe = done[0]
+    lone = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=48, slots=1, prefill_chunk=8, max_seq=64))
+    lone.submit(ServeRequest(rid=0, prompt=probe.prompt,
+                             max_new=len(probe.generated)))
+    assert lone.run()[0].generated == probe.generated
+
+
+def test_engine_preemption_resume_deterministic():
+    """A page-starved engine must preempt under pressure and still produce
+    exactly the tokens of an unconstrained run (requeue -> re-prefill ->
+    resume)."""
+    cfg, params = _cfg_params()
+    outs = {}
+    for tag, pages in (("ample", 64), ("tight", 9)):
+        eng = PagedEngine(cfg, params, EngineConfig(
+            page_size=8, num_pages=pages, slots=4, prefill_chunk=8,
+            max_seq=64))
+        for r in _reqs(cfg, n=10):
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 10
+        outs[tag] = ({r.rid: r.generated for r in done},
+                     eng.stats()["preemptions"])
+    assert outs["tight"][1] > 0          # pressure actually preempted
+    assert outs["ample"][1] == 0
+    assert outs["ample"][0] == outs["tight"][0]
+
+
+def test_engine_sampling_reproducible():
+    cfg, params = _cfg_params()
+
+    def run_once(seed):
+        eng = PagedEngine(cfg, params, EngineConfig(
+            page_size=8, num_pages=48, slots=2, prefill_chunk=8, max_seq=64))
+        eng.submit(ServeRequest(
+            rid=0, prompt=np.arange(6) % cfg.vocab, max_new=10,
+            sampling=SP.SamplingParams(temperature=0.8, top_k=50,
+                                       top_p=0.95, seed=seed)))
+        return eng.run()[0].generated
+
+    a, b, c = run_once(7), run_once(7), run_once(8)
+    assert a == b
+    assert a != c
+
+
+def test_engine_rejects_impossible_requests():
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=4, slots=2, prefill_chunk=8, max_seq=64))
+    eng.submit(ServeRequest(rid=0, prompt=np.zeros(40, np.int64), max_new=4))
+    eng.submit(ServeRequest(rid=1, prompt=np.zeros(4, np.int64), max_new=4))
+    done = {r.rid: r for r in eng.run()}
+    assert done[0].truncated and not done[0].generated   # rejected
+    assert len(done[1].generated) == 4                   # small one served
+    assert eng.stats()["rejected"] == 1
+
+
+def test_engine_rejects_prompt_beyond_max_seq():
+    """A prompt that can't fit max_seq must be rejected at admission, not
+    admitted into an evict-everyone/self-preempt livelock."""
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=48, slots=2, prefill_chunk=8, max_seq=24))
+    eng.submit(ServeRequest(rid=0, prompt=np.zeros(30, np.int64), max_new=4))
+    eng.submit(ServeRequest(rid=1, prompt=np.zeros(6, np.int64), max_new=4))
+    done = {r.rid: r for r in eng.run(max_ticks=100)}
+    assert done[0].truncated and not done[0].generated
+    assert len(done[1].generated) == 4
+    assert eng.stats()["preemptions"] == 0
+
+
+def test_engine_full_admission_reserves_pages():
+    """admission='full' holds the worst-case pages at admission, so admitted
+    requests are never preempted even when the pool is tight."""
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=9, slots=4, prefill_chunk=8, max_seq=64,
+        admission="full"))
+    for r in _reqs(cfg, n=6):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 6 and not any(r.truncated for r in done)
+    assert eng.stats()["preemptions"] == 0
+
+
+def test_paged_a1_sig_kept_for_inactive_slots():
+    """Slots sitting a tick out (n_valid == 0) must keep their cached FAL
+    signal instead of having it clobbered by padded-lane garbage."""
+    cfg, params = _cfg_params()
+    cache = M.init_paged_cache(cfg, 8, 8, 2, "float32")
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    step = jax.jit(lambda b, c: M.paged_decode_step(params, cfg, b, c))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    _, cache = step({"tokens": toks, "pos": jnp.zeros((2,), jnp.int32),
+                     "n_valid": jnp.full((2,), 8, jnp.int32),
+                     "block_tables": bt}, cache)
+    before = np.asarray(cache["a1_sig"])
+    # decode tick for slot 0 only; slot 1 sits out
+    _, cache = step({"tokens": jnp.zeros((2, 1), jnp.int32),
+                     "pos": jnp.asarray([8, 8], jnp.int32),
+                     "n_valid": jnp.asarray([1, 0], jnp.int32),
+                     "block_tables": bt}, cache)
+    after = np.asarray(cache["a1_sig"])
+    assert not np.allclose(before[0], after[0])   # active slot updated
+    assert np.array_equal(before[1], after[1])    # inactive slot untouched
+
+
+# --------------------------------------------------------------------------- #
+# sampler
+# --------------------------------------------------------------------------- #
+def test_sampler_greedy_and_topk1_match_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 64))
+    ref = np.asarray(jnp.argmax(logits, -1))
+    B = logits.shape[0]
+    z = jnp.zeros((B,), jnp.int32)
+    greedy = SP.sample_tokens(logits, jnp.zeros((B,)), z, jnp.ones((B,)),
+                              z, z)
+    assert np.array_equal(np.asarray(greedy), ref)
+    top1 = SP.sample_tokens(logits, jnp.full((B,), 1.0), jnp.ones((B,),
+                            jnp.int32), jnp.ones((B,)), z, z)
+    assert np.array_equal(np.asarray(top1), ref)
+
+
+def test_sampler_topk_mask_respected():
+    logits = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+    B, k = 4, 5
+    topk_sets = np.asarray(jax.lax.top_k(logits, k)[1])
+    for seed in range(6):
+        toks = np.asarray(SP.sample_tokens(
+            logits, jnp.full((B,), 1.5), jnp.full((B,), k, jnp.int32),
+            jnp.ones((B,)), jnp.full((B,), seed, jnp.int32),
+            jnp.zeros((B,), jnp.int32)))
+        for b in range(B):
+            assert toks[b] in topk_sets[b]
+
+
+def test_sampler_key_is_position_derived():
+    """Same (seed, position) -> same draw; different positions -> an
+    independent stream (the property preemption-resume determinism rests
+    on).  Flat logits make a position-insensitive key collide with ~1/V
+    probability per draw."""
+    logits = jnp.zeros((1, 256))
+    args = (logits, jnp.ones((1,)), jnp.zeros((1,), jnp.int32),
+            jnp.ones((1,)), jnp.asarray([3], jnp.int32))
+    t5a = SP.sample_tokens(*args, jnp.asarray([5], jnp.int32))
+    t5b = SP.sample_tokens(*args, jnp.asarray([5], jnp.int32))
+    assert int(t5a[0]) == int(t5b[0])
+    draws = {int(SP.sample_tokens(*args, jnp.asarray([p], jnp.int32))[0])
+             for p in range(5, 13)}
+    assert len(draws) > 1                    # pos actually enters the key
+
+
+# --------------------------------------------------------------------------- #
+# allocator / block tables
+# --------------------------------------------------------------------------- #
+def test_page_allocator_bookkeeping():
+    a = PageAllocator(num_pages=8, page_size=4)
+    assert a.capacity == 7                       # page 0 is scratch
+    got = a.alloc(3)
+    assert got is not None and 0 not in got
+    assert a.in_use == 3 and a.alloc(5) is None  # all-or-nothing
+    assert a.in_use == 3                         # failed alloc took nothing
+    a.free(got[:1])
+    st = a.stats()
+    assert st["allocs"] == 3 and st["frees"] == 1 and st["in_use"] == 2
+    assert st["peak_in_use"] == 3
+
+
+def test_block_table_growth_and_fragmentation():
+    a = PageAllocator(num_pages=16, page_size=4)
+    t = BlockTable(a, max_blocks=8)
+    assert t.ensure(1) and len(t.pages) == 1
+    assert t.ensure(4) and len(t.pages) == 1     # same page still covers
+    assert t.ensure(5) and len(t.pages) == 2
+    assert t.internal_fragmentation(5) == 3
+    row = t.as_row()
+    assert row.shape == (8,) and list(row[:2]) == t.pages
+    assert not t.ensure(100)                     # beyond max_blocks
+    t.release()
+    assert a.in_use == 0 and t.pages == []
+    assert pages_needed(0, 4) == 0 and pages_needed(9, 4) == 3
