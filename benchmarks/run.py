@@ -1,14 +1,29 @@
 """Benchmark harness — one bench per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes
+``BENCH_<suite>.json`` for suites that return structured results (the
+machine-readable perf trajectory).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json]
 """
 import os
 
-# bench_comm needs a model-axis mesh; everything else is happy with it too.
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# bench_comm needs >= 8 host devices; everything else is happy with them
+# too.  APPEND to any user-exported XLA_FLAGS — setdefault would silently
+# drop the forced count whenever XLA_FLAGS is already set — and RAISE a
+# user-exported count below 8 (keeping it would still fail bench_comm's
+# `len(jax.devices()) >= 8` assert).
+import re as _re
+
+_FORCE = "--xla_force_host_platform_device_count=8"
+_flags = os.environ.get("XLA_FLAGS", "")
+_m = _re.search(r"--xla_force_host_platform_device_count=(\d+)", _flags)
+if _m is None:
+    os.environ["XLA_FLAGS"] = (_flags + " " + _FORCE).strip()
+elif int(_m.group(1)) < 8:
+    os.environ["XLA_FLAGS"] = _flags.replace(_m.group(0), _FORCE)
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -19,6 +34,10 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="longer training benches")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json for suites returning data")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the --json output files")
     args = ap.parse_args()
 
     def csv(name, us, derived=""):
@@ -47,7 +66,12 @@ def main() -> None:
         t0 = time.time()
         print(f"# suite {name}", flush=True)
         try:
-            fn()
+            data = fn()
+            if args.json and isinstance(data, dict):
+                path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump(data, f, indent=1, sort_keys=True)
+                print(f"# wrote {path}", flush=True)
         except Exception:
             failures += 1
             traceback.print_exc()

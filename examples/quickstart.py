@@ -26,6 +26,9 @@ print(f"forward: logits {logits.shape}, FAL connection = {cfg.connection}")
 state, hist = trainer.train(cfg, steps=30, batch=8, seq_len=64, log_every=10)
 
 # ---- 3. the paper's point: FAL halves per-block TP all-reduces -------------
+# make_tp_forward builds REAL DecoderLM blocks and runs them through the
+# explicit partial-sum shard_map stack (model.decoder_stack_tp) — the HLO
+# below is the production collective structure, not a toy's
 mesh = jax.make_mesh((8,), ("model",))
 for mode in ("preln", "fal"):
     init, fwd = tp.make_tp_forward(mesh, n_layers=4, d=64, d_ff=256,

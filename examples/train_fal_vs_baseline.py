@@ -6,6 +6,7 @@ Run:  PYTHONPATH=src python examples/train_fal_vs_baseline.py [--steps 300]
 """
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -54,6 +55,7 @@ def main():
 
     print(json.dumps({m: {k: v for k, v in r.items() if k != 'curve'}
                       for m, r in results.items()}, indent=1))
+    os.makedirs("experiments", exist_ok=True)
     with open("experiments/train_fal_vs_baseline.json", "w") as f:
         json.dump(results, f, indent=1)
 

@@ -20,7 +20,12 @@ technique is the choice of ``mlp_input``:
 ``mlp_input_depends_on_local_attention(mode)`` is the property the TP runtime
 keys on: when False, the block's MHA partial sum never needs to be assembled
 before the MLP, so the per-block MHA all-reduce is fused into the MLP one
-(2 -> 1 collectives per block; core/tp.py).
+(2 -> 1 collectives per block).  Since the toy-stack retirement this predicate
+drives the REAL model: ``models/blocks.py::block_apply`` consumes it (via
+``attention_must_assemble``) to choose between the two-psum assembled path and
+the paper's fused single-psum path whenever it runs inside the
+``models/model.py::decoder_stack_tp`` shard_map; the replicated single-device
+path is the same code with the assemble reduced over nothing (tp_size = 1).
 """
 from __future__ import annotations
 
@@ -38,6 +43,21 @@ USES_FIRST_ATTENTION = {"fal", "falplus"}
 
 
 def mlp_input_depends_on_local_attention(mode: str) -> bool:
+    return _NEEDS_LOCAL_ATTN[mode]
+
+
+def attention_must_assemble(mode: str, is_block0: bool = False) -> bool:
+    """True when the block's own MHA output must be fully assembled (post
+    TP all-reduce) before its MLP input / signal export can be formed.
+
+    Steady-state blocks: exactly ``mlp_input_depends_on_local_attention``.
+    Block 0 additionally assembles for ``fal`` (it exports the LN'd
+    first-attention signal — the single extra all-reduce of Fig 2, paid once
+    for the whole depth) and for ``ablation2`` (its eq-4 direct connection);
+    only ``parallel`` keeps block 0 fused.
+    """
+    if is_block0:
+        return mode != "parallel"
     return _NEEDS_LOCAL_ATTN[mode]
 
 

@@ -1,153 +1,77 @@
-"""Explicit Megatron-style tensor parallelism via shard_map — the paper's
-Fig 2 on a TPU mesh.
+"""Tensor-parallel tooling for the unified decoder family.
 
-Per transformer block and direction:
-  preln   : all-reduce(MHA partial) -> MLP -> all-reduce(MLP partial)   = 2
-  fal     : MHA partial + MLP partial added LOCALLY -> one all-reduce   = 1
-  parallel: same as fal (but no first-attention signal -> worse quality)
+The explicit partial-sum TP execution itself lives with the model now:
+``models/blocks.py::block_apply`` composes head-/hidden-/expert-sharded
+local kernels per ``core/fal.py::attention_must_assemble`` and
+``models/model.py::decoder_stack_tp`` drives the whole block stack under one
+shard_map (the toy duplicate-weight stack that used to live here is gone).
+Per transformer block and connection mode the collective structure is the
+paper's Fig 2:
 
-``count_collectives`` parses lowered HLO so tests/benches can assert the
-halving structurally (no hardware needed).
+  preln / falplus : all-reduce(MHA partial) -> MLP -> all-reduce(MLP) = 2
+  fal / parallel  : MHA partial + MLP partial added LOCALLY -> ONE all-reduce
+  block 0 (fal)   : one extra assemble to export the first-attention signal
+                    -> (L+1)/(2L) all-reduce bytes vs preln over L layers
+
+This module keeps what is reusable across tests and benchmarks:
+
+  * ``make_tp_forward`` — thin wrapper that builds a real-``DecoderLM``
+    block stack (``models/blocks.py`` weights, GQA attention, cfg.mlp FFN)
+    and returns (init_fn, jitted forward) running ``decoder_stack_tp`` on a
+    given mesh — the structural harness for asserting the halving on
+    lowered HLO without hardware.
+  * ``count_collectives`` / ``collective_bytes`` — HLO-text parsers for
+    collective op counts and payload bytes (scan bodies counted once; use
+    ``benchmarks.hlo_cost.analyze`` for trip-count-aware totals).
 """
 from __future__ import annotations
 
 import re
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compat import shard_map
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.models import layers as L
-
-
-# ------------------------------------------------------------------------- #
-def tp_block_init(key, d, d_ff, n_heads, dtype="float32"):
-    ks = jax.random.split(key, 6)
-    s = 1.0 / np.sqrt(d)
-    dt = jnp.dtype(dtype)
-    return {
-        "ln1": L.norm_init(d, "layernorm", dtype),
-        "ln2": L.norm_init(d, "layernorm", dtype),
-        "ln_a": L.norm_init(d, "layernorm", dtype),   # FAL footnote-3 LN
-        # (3, d, d) so column-sharding the LAST dim keeps each shard's
-        # q/k/v slices head-aligned (a flat (d, 3d) would interleave)
-        "wqkv": jax.random.normal(ks[0], (3, d, d), dt) * s,
-        "wo": jax.random.normal(ks[1], (d, d), dt) * s,
-        "wi": jax.random.normal(ks[2], (d, d_ff), dt) * s,
-        "wo2": jax.random.normal(ks[3], (d_ff, d), dt) / np.sqrt(d_ff),
-    }
-
-
-def _attn_local(p, h, n_heads_local, causal=True):
-    """Local slice of MHA: wqkv column-sharded -> heads_local heads."""
-    B, S, _ = h.shape
-    w = p["wqkv"]
-    q, k, v = h @ w[0], h @ w[1], h @ w[2]
-    Dh = q.shape[-1] // n_heads_local
-    q = q.reshape(B, S, n_heads_local, Dh)
-    k = k.reshape(B, S, n_heads_local, Dh)
-    v = v.reshape(B, S, n_heads_local, Dh)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * (Dh ** -0.5)
-    if causal:
-        mask = jnp.tril(jnp.ones((S, S), bool))
-        s = jnp.where(mask, s, -1e30)
-    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
-    return o.reshape(B, S, -1) @ p["wo"]          # row-sharded wo -> PARTIAL sum
-
-
-def _mlp_local(p, h):
-    return jax.nn.gelu(h @ p["wi"]) @ p["wo2"]     # row-sharded wo2 -> PARTIAL
-
-
-def tp_block_apply(p, x, a1n, *, mode, n_heads, tp_size, axis="model"):
-    """Runs INSIDE shard_map.  x, a1n replicated; weights sharded on ``axis``.
-
-    Returns (x_out, a1n_candidate).  The collective structure is the paper's
-    contribution:  preln/falplus -> 2 psums;  fal/parallel -> 1 psum.
-    """
-    h = L.norm_apply(p["ln1"], x, "layernorm")
-    a_partial = _attn_local(p, h, n_heads // tp_size)
-
-    if mode in ("preln", "falplus"):
-        a = jax.lax.psum(a_partial, axis)                       # all-reduce 1
-        if mode == "preln":
-            mlp_in = L.norm_apply(p["ln2"], x + a, "layernorm")
-        else:
-            mlp_in = (L.norm_apply(p["ln2"], x + a, "layernorm")
-                      + L.norm_apply(p["ln_a"], a1n, "layernorm"))
-        m = jax.lax.psum(_mlp_local(p, mlp_in), axis)           # all-reduce 2
-        return x + a + m, a
-
-    if mode in ("fal", "parallel"):
-        mlp_in = L.norm_apply(p["ln2"], x, "layernorm")
-        if mode == "fal":
-            mlp_in = mlp_in + a1n
-        m_partial = _mlp_local(p, mlp_in)
-        # the paper's fusion: both partial sums combined in ONE all-reduce
-        am = jax.lax.psum(a_partial + m_partial, axis)          # all-reduce 1
-        return x + am, am  # a1n candidate needs the assembled a; see block0
-
-    raise ValueError(mode)
-
-
-def tp_block0_apply(p, x, *, n_heads, tp_size, axis="model"):
-    """Block 1 under FAL: must assemble its MHA output (one extra all-reduce,
-    paid ONCE for the whole depth) to produce the LN'd first-attention
-    signal."""
-    h = L.norm_apply(p["ln1"], x, "layernorm")
-    a = jax.lax.psum(_attn_local(p, h, n_heads // tp_size), axis)
-    a1n = L.norm_apply(p["ln_a"], a, "layernorm")
-    mlp_in = L.norm_apply(p["ln2"], x, "layernorm") + a1n
-    m = jax.lax.psum(_mlp_local(p, mlp_in), axis)
-    return x + a + m, a1n
+def bench_stack_config(n_layers, d, d_ff, n_heads, mode):
+    """A minimal real-model dense config for TP structure tests/benches."""
+    from repro.configs.base import ModelConfig
+    return ModelConfig(
+        arch_id="tp-bench", family="dense", n_layers=n_layers, d_model=d,
+        n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff, vocab=256,
+        connection=mode, norm="layernorm", mlp="gelu", dtype="float32",
+        param_dtype="float32", remat=False, attn_block_q=64)
 
 
 def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model"):
-    """Builds (init_fn, jitted forward) for an n_layer TP stack on ``mesh``."""
-    tp_size = mesh.shape[axis]
+    """(init_fn, jitted forward) for an n_layer unified-block TP stack.
+
+    The params are real ``models/blocks.py`` block weights (the same trees
+    ``DecoderLM`` trains); the forward is ``models/model.py::
+    decoder_stack_tp`` on ``mesh`` — so HLO lowered from here IS the
+    production collective structure, not a toy's.
+    """
+    from repro.models import blocks as BL
+    from repro.models import model as M
+
+    cfg = bench_stack_config(n_layers, d, d_ff, n_heads, mode)
+    dax = tuple(a for a in mesh.axis_names if a != axis)
+    pctx = {"mesh": mesh, "data_axes": dax, "model_axis": axis,
+            "tp": "explicit"}
 
     def init_fn(key):
-        ks = jax.random.split(key, n_layers)
-        return jax.vmap(lambda k: tp_block_init(k, d, d_ff, n_heads))(ks)
-
-    wspec = {
-        "ln1": {"scale": P(), "bias": P()},
-        "ln2": {"scale": P(), "bias": P()},
-        "ln_a": {"scale": P(), "bias": P()},
-        "wqkv": P(None, None, None, axis),  # column (stacked on dim 0)
-        "wo": P(None, axis, None),     # row
-        "wi": P(None, None, axis),
-        "wo2": P(None, axis, None),
-    }
+        k0, ks = jax.random.split(key)
+        p = {"block0": BL.block_init(k0, cfg, is_block0=True)}
+        if n_layers > 1:
+            p["blocks_dense"] = jax.vmap(
+                lambda k: BL.block_init(k, cfg))(
+                jax.random.split(ks, n_layers - 1))
+        return p
 
     def fwd(params, x):
-        def local(params, x):
-            a1n = jnp.zeros_like(x)
-            p0 = jax.tree.map(lambda a: a[0], params)
-            if mode == "fal":
-                x, a1n = tp_block0_apply(p0, x, n_heads=n_heads,
-                                         tp_size=tp_size, axis=axis)
-            else:
-                x, _ = tp_block_apply(p0, x, a1n, mode=mode, n_heads=n_heads,
-                                      tp_size=tp_size, axis=axis)
-
-            def body(h, pb):
-                h, _ = tp_block_apply(pb, h, a1n, mode=mode, n_heads=n_heads,
-                                      tp_size=tp_size, axis=axis)
-                return h, None
-
-            rest = jax.tree.map(lambda a: a[1:], params)
-            x, _ = jax.lax.scan(body, x, rest)
-            return x
-
-        fn = shard_map(local, mesh=mesh,
-                           in_specs=(wspec, P()), out_specs=P(),
-                           check_vma=False)
-        return fn(params, x)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y, _ = M.decoder_stack_tp(params, cfg, x, positions, pctx)
+        return y
 
     return init_fn, jax.jit(fwd)
 

@@ -35,8 +35,10 @@ def _fsdp_axes(cfg, mesh):
 
 
 def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
-               extra_overrides=None):
-    """Returns (lowered, compiled, info dict)."""
+               extra_overrides=None, tp="gspmd"):
+    """Returns (lowered, compiled, info dict).  ``tp="explicit"`` routes the
+    decoder family through the shard_map partial-sum stack
+    (model.decoder_stack_tp) instead of implicit GSPMD sharding."""
     shape_cfg = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
     cfg = SP.dryrun_overrides(cfg, shape_cfg)
@@ -51,6 +53,10 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
     fax = _fsdp_axes(cfg, mesh) if fsdp else ()
     parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
                     "model_axis": MX.MODEL}
+    if tp == "explicit":
+        from repro.models.model import require_explicit_tp
+        require_explicit_tp(cfg)
+        parallel_ctx["tp"] = "explicit"
 
     with mesh:
         if shape_cfg.mode == "train":
@@ -112,12 +118,14 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
 
 
 def run_one(arch, shape_name, mesh_kind, out_dir=None, connection=None,
-            fsdp=True, save_hlo=True, extra_overrides=None, tag_suffix=""):
+            fsdp=True, save_hlo=True, extra_overrides=None, tag_suffix="",
+            tp="gspmd"):
     mesh = MX.make_production_mesh(multi_pod=(mesh_kind == "multi"))
     try:
         lowered, compiled, info = lower_pair(arch, shape_name, mesh,
                                              connection=connection, fsdp=fsdp,
-                                             extra_overrides=extra_overrides)
+                                             extra_overrides=extra_overrides,
+                                             tp=tp)
     except Exception as e:  # noqa
         info = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                 "error": f"{type(e).__name__}: {e}",
@@ -148,6 +156,9 @@ def main():
     ap.add_argument("--connection", default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tp", default="gspmd", choices=["gspmd", "explicit"],
+                    help="explicit = shard_map partial-sum TP stack "
+                         "(decoder family, train shapes)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--no-hlo", action="store_true")
     ap.add_argument("--set", dest="overrides", action="append", default=[],
@@ -182,7 +193,8 @@ def main():
                                          extra_overrides=overrides or None,
                                          tag_suffix="_".join(
                                              f"{k}-{v}" for k, v in
-                                             overrides.items())[:40])
+                                             overrides.items())[:40],
+                                         tp=args.tp)
                 if "skipped" in info:
                     print(f"SKIP  {arch:24s} {shape:12s} {mk}: "
                           f"{info['skipped']}", flush=True)

@@ -10,6 +10,12 @@ attention heads + FFN hidden over ``model`` (column/row), vocab over
 ``model``, MoE experts over ``model`` (expert parallelism), Mamba mixers
 replicated over ``model`` (sharded over batch only; DESIGN.md §4).  Stacked
 (scan) parameter trees get leading ``None``s automatically.
+
+These specs serve double duty: GSPMD layout hints for the implicit path,
+and the shard_map ``in_specs`` of the explicit partial-sum TP stack
+(``models/model.py::decoder_stack_tp`` — pass ``tp="explicit"`` in the
+parallel_ctx).  The column/row orientation is what makes the blocks' local
+kernels return partial sums there.
 """
 from __future__ import annotations
 
@@ -44,7 +50,7 @@ _BASE = {
     "conv_b": (1, P()), "conv_w": (2, P()),
     # attention (GQA)
     "wq": (2, P(None, MODEL)), "wk": (2, P(None, MODEL)),
-    "wv": (2, P(None, MODEL)), "wqkv": (2, P(None, MODEL)),
+    "wv": (2, P(None, MODEL)),
     "wo": (2, P(MODEL, None)),
     # MLA: down-projections replicated (small), up-projections column
     "w_dq": (2, P()), "w_dkv": (2, P()), "w_kr": (2, P()),
@@ -113,7 +119,11 @@ def _leaf_spec(key, leaf, in_moe, parent, fsdp_axes):
     return _add_fsdp(full, leaf.shape, fsdp_axes)
 
 
-def param_specs(params, cfg=None, fsdp_axes=()):
+def param_specs(params, cfg=None, fsdp_axes=(), kv_replicated=False):
+    """``kv_replicated``: keep wk/wv whole on every model shard — the
+    Megatron GQA fallback when n_kv_heads < tp_size, used by the explicit-TP
+    stack (each device computes all KV heads and slices its group's one;
+    models/attention.py)."""
     fsdp_axes = tuple(fsdp_axes)
 
     def walk(node, key=None, in_moe=False, parent=None):
@@ -127,6 +137,8 @@ def param_specs(params, cfg=None, fsdp_axes=()):
                     for k, v in node.items()}
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v, key, in_moe, parent) for v in node)
+        if kv_replicated and key in ("wk", "wv"):
+            return P()
         return _leaf_spec(key, node, in_moe, parent, fsdp_axes)
     return walk(params)
 

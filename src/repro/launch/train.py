@@ -25,6 +25,9 @@ def main():
                     choices=["cosine", "onecycle", "wsd"])
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--tp", default="gspmd", choices=["gspmd", "explicit"],
+                    help="with --mesh: explicit = shard_map partial-sum TP "
+                         "stack (the paper's per-block collective structure)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -46,10 +49,17 @@ def main():
 
     parallel_ctx = None
     in_shardings = None
+    if args.tp == "explicit" and not args.mesh:
+        raise ValueError("--tp explicit requires --mesh (the explicit-TP "
+                         "stack shards over the production mesh)")
     if args.mesh:
         mesh = MX.make_production_mesh(multi_pod=(args.mesh == "multi"))
         parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
                         "model_axis": MX.MODEL}
+        if args.tp == "explicit":
+            from repro.models.model import require_explicit_tp
+            require_explicit_tp(cfg)
+            parallel_ctx["tp"] = "explicit"
 
     print(f"training {cfg.arch_id} connection={cfg.connection} "
           f"layers={cfg.n_layers} d={cfg.d_model}", flush=True)

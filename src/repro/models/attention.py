@@ -212,8 +212,15 @@ def gqa_init(key, cfg, cross=False):
 
 
 def gqa_qkv(p, cfg, x, positions, kv_x=None, rope=True):
-    """Project to q,k,v (with qk_norm + rope)."""
-    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    """Project to q,k,v (with qk_norm + rope).
+
+    Head counts are derived from the WEIGHT shapes, not cfg: inside the
+    explicit-TP shard_map (model.decoder_stack_tp) each device holds a
+    head-aligned column slice of wq/wk/wv, so the same code is the local
+    kernel over H/tp heads — and, with the row-sharded ``wo`` downstream,
+    yields the per-device partial sum of the paper's Fig 2."""
+    Dh = cfg.resolved_head_dim
+    H, Hkv = p["wq"].shape[-1] // Dh, p["wk"].shape[-1] // Dh
     B, S = x.shape[:2]
     kv_x = x if kv_x is None else kv_x
     Skv = kv_x.shape[1]
@@ -269,9 +276,27 @@ def _use_seq_parallel(cfg, pctx, S):
     return S % pctx["mesh"].shape[pctx["model_axis"]] == 0
 
 
+def _kv_group_slice(k, v, cfg, pctx):
+    """Megatron GQA fallback for n_kv_heads < tp_size inside the explicit-TP
+    shard_map: wk/wv arrive REPLICATED (launch.mesh kv_replicated specs),
+    every device computes all KV heads cheaply and slices the one its query
+    heads attend to (tp_size/n_kv_heads devices share each KV head)."""
+    if pctx is None or pctx.get("tp_axis") is None:
+        return k, v
+    tp = pctx.get("tp_size", 1)
+    if cfg.n_kv_heads % tp == 0:
+        return k, v          # kv heads are sharded like query heads
+    rep = tp // cfg.n_kv_heads
+    idx = jax.lax.axis_index(pctx["tp_axis"]) // rep
+    return (jax.lax.dynamic_slice_in_dim(k, idx, 1, axis=2),
+            jax.lax.dynamic_slice_in_dim(v, idx, 1, axis=2))
+
+
 def gqa_apply(p, cfg, x, positions, *, window=0, causal=True, pctx=None):
-    """Full-sequence attention (train / prefill). Returns (B,S,D)."""
+    """Full-sequence attention (train / prefill). Returns (B,S,D) — a TP
+    partial sum when the weights are the explicit-TP shards."""
     q, k, v = gqa_qkv(p, cfg, x, positions)
+    k, v = _kv_group_slice(k, v, cfg, pctx)
     B, S = x.shape[:2]
     if _use_seq_parallel(cfg, pctx, S):
         o = sequence_parallel_attention(q, k, v, cfg, pctx, causal=causal,
@@ -337,8 +362,10 @@ def mla_init(key, cfg):
 
 def _mla_q(p, cfg, x, positions):
     B, S = x.shape[:2]
-    H = cfg.n_heads
     dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    # head count from the weight shape: w_uq may be a column (head) shard
+    # inside the explicit-TP shard_map (same contract as gqa_qkv)
+    H = p["w_uq"].shape[-1] // (dn + dr)
     cq = L.norm_apply(p["q_norm"], x @ p["w_dq"].astype(x.dtype))
     q = (cq @ p["w_uq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
@@ -354,10 +381,14 @@ def _mla_ckv(p, cfg, x, positions):
 
 
 def mla_apply(p, cfg, x, positions, pctx=None):
-    """Full-sequence MLA (train / prefill): expand k,v; blockwise attention."""
+    """Full-sequence MLA (train / prefill): expand k,v; blockwise attention.
+
+    Like gqa_apply, head count comes from the (possibly head-sharded)
+    up-projection weights; with the row-sharded ``wo`` the result is then a
+    TP partial sum."""
     B, S = x.shape[:2]
-    H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = p["w_uk"].shape[-1] // dn
     q_nope, q_rope = _mla_q(p, cfg, x, positions)
     c, kr = _mla_ckv(p, cfg, x, positions)
     k_nope = (c @ p["w_uk"].astype(x.dtype)).reshape(B, S, H, dn)

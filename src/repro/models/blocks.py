@@ -42,9 +42,25 @@ def block_init(key, cfg, *, kind="dense", cross=False, is_block0=False):
     return p
 
 
+def _tp_axis(parallel_ctx):
+    """Mesh axis name when running INSIDE the explicit-TP shard_map
+    (model.decoder_stack_tp); None on the replicated / GSPMD paths."""
+    return parallel_ctx.get("tp_axis") if parallel_ctx else None
+
+
+def _assemble(partial, axis):
+    """All-reduce a TP partial sum over ``axis``; identity when replicated.
+    tp_size = 1 is the degenerate psum — one code path, not two."""
+    return jax.lax.psum(partial, axis) if axis is not None else partial
+
+
 def _ffn_apply(p, cfg, h, kind, parallel_ctx, mode):
-    """Returns (y, aux)."""
+    """Returns (y, aux).  Under explicit TP ``y`` is a PARTIAL sum (dense:
+    column-sharded wi/wg, row-sharded wo; MoE: local experts only)."""
     if kind == "moe":
+        axis = _tp_axis(parallel_ctx)
+        if axis is not None:
+            return M.moe_apply_partial(p["ffn"], cfg, h, axis)
         if (parallel_ctx is not None and mode == "train"
                 and parallel_ctx.get("mesh") is not None):
             fn = (M.moe_apply_shard_slot if cfg.route_groups
@@ -67,6 +83,17 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
 
     Returns (x_out, a_raw, aux, new_cache).  ``a_raw`` is this block's MHA
     output (block 0 exports it as the first-attention signal).
+
+    Inside the explicit-TP shard_map (``parallel_ctx["tp_axis"]`` set) the
+    attention and FFN kernels see head-/hidden-/expert-sharded weights and
+    return PARTIAL sums; this function owns the paper's collective
+    structure: modes whose MLP input needs this block's assembled attention
+    (``fal.attention_must_assemble``) pay two all-reduces, everything else
+    adds the MHA and MLP partials locally and pays ONE fused all-reduce
+    (Fig 2's 2 -> 1 halving).  With tp_size = 1 the psums are identity and
+    this is exactly the replicated path — one code path for the family.
+    ``a_raw`` is a partial sum on the fused path (no fused-path caller
+    consumes it: fal/falplus block 0 always assemble).
     """
     h = L.norm_apply(p["ln1"], x, cfg.norm)
     new_cache = None
@@ -91,15 +118,33 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
         else:
             a = A.gqa_apply(p["attn"], cfg, h, positions, window=window,
                             causal=causal, pctx=parallel_ctx)
+    axis = _tp_axis(parallel_ctx)
+    # post-norms and cross-attention normalise/consume the true ``a`` —
+    # nonlinear in the partial, so they force the assembled path
+    fused = (axis is not None and not cfg.post_norms and "xattn" not in p
+             and not fal.attention_must_assemble(cfg.connection, is_block0))
+
+    if fused:
+        # MLP input is independent of this block's attention: add the MHA
+        # and MLP partial sums locally, assemble both in ONE all-reduce
+        if is_block0:
+            mlp_in = fal.block0_mlp_input(cfg, p, x, a)
+        else:
+            mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
+        y, aux = _ffn_apply(p, cfg, mlp_in, kind, parallel_ctx, mode)
+        return x + _assemble(a + y, axis), a, aux, new_cache
+
+    a = _assemble(a, axis)
     if cfg.post_norms:
         a = L.norm_apply(p["post_attn"], a, cfg.norm)
 
     resid = x + a
 
     if "xattn" in p:  # whisper decoder cross-attention
-        cx = A.gqa_cross_apply(p["xattn"], cfg,
-                               L.norm_apply(p["ln_x"], resid, cfg.norm),
-                               enc_out)
+        cx = _assemble(
+            A.gqa_cross_apply(p["xattn"], cfg,
+                              L.norm_apply(p["ln_x"], resid, cfg.norm),
+                              enc_out), axis)
         resid = resid + cx
         x = x + cx  # the FAL mlp_input uses x without self-attn but with cross
 
@@ -109,6 +154,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
         mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
 
     y, aux = _ffn_apply(p, cfg, mlp_in, kind, parallel_ctx, mode)
+    y = _assemble(y, axis)
     if cfg.post_norms:
         y = L.norm_apply(p["post_ffn"], y, cfg.norm)
     return resid + y, a, aux, new_cache

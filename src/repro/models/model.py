@@ -11,6 +11,15 @@ Layer stacks run under ``jax.lax.scan`` over stacked params (bounded HLO for
 61-layer models); blocks are ``jax.checkpoint``-ed when cfg.remat.  The FAL
 first-attention signal is produced by the unscanned block 0 and closed over
 by the scan body (a scan-carried constant — zero recompute, DESIGN.md §7).
+
+Tensor parallelism: with ``parallel_ctx = {"mesh", "data_axes",
+"model_axis"}`` the forward runs under implicit GSPMD sharding; adding
+``"tp": "explicit"`` routes the decoder family through
+``decoder_stack_tp`` — ONE shard_map over the whole block stack in which
+attention/FFN kernels see their weight shards and return partial sums, and
+``blocks.block_apply`` realises the paper's per-block collective structure
+(fal/parallel: one fused all-reduce; preln/falplus: two; block 0 pays the
+single extra assemble for the first-attention export).
 """
 from __future__ import annotations
 
@@ -125,6 +134,122 @@ def _logits(p, cfg, x):
     return L.softcap(L.dense_apply(p["head"], x), cfg.final_softcap)
 
 
+EXPLICIT_TP_FAMILIES = ("dense", "moe", "vlm")
+
+
+def require_explicit_tp(cfg):
+    """Entry-point guard: fail loudly when a config's family has no
+    explicit-TP stack — other families would silently run implicit GSPMD
+    and mislabel any numbers collected under the flag."""
+    if cfg.family not in EXPLICIT_TP_FAMILIES:
+        raise ValueError(f"--tp explicit: family '{cfg.family}' has no "
+                         f"explicit-TP stack (decoder family only: "
+                         f"{EXPLICIT_TP_FAMILIES})")
+
+
+def use_explicit_tp(parallel_ctx) -> bool:
+    """True when the caller asked for the explicit partial-sum TP path
+    (shard_map over the block stack) instead of implicit GSPMD."""
+    return bool(parallel_ctx) and parallel_ctx.get("tp") == "explicit" \
+        and parallel_ctx.get("mesh") is not None
+
+
+def _check_tp_shapes(cfg, tp_size):
+    """Explicit TP shards heads/hidden/experts evenly — fail loudly when the
+    config doesn't divide (GSPMD pads; shard_map in_specs cannot)."""
+    def div(n, what):
+        if n % tp_size:
+            raise ValueError(f"explicit TP: {what}={n} is not divisible by "
+                             f"tp_size={tp_size}")
+    div(cfg.n_heads, "n_heads")
+    if not cfg.use_mla and cfg.n_kv_heads % tp_size \
+            and tp_size % cfg.n_kv_heads:
+        # n_kv_heads < tp_size is fine when groups align (KV replication,
+        # attention._kv_group_slice); anything else cannot shard evenly
+        raise ValueError(f"explicit TP: n_kv_heads={cfg.n_kv_heads} divides "
+                         f"neither way with tp_size={tp_size}")
+    div(cfg.dense_d_ff or cfg.d_ff, "d_ff")
+    if cfg.n_experts:
+        div(cfg.n_experts, "n_experts")
+        if cfg.n_shared_experts:
+            div(cfg.moe_d_ff * cfg.n_shared_experts, "shared-expert d_ff")
+
+
+def decoder_stack_tp(p, cfg, x, positions, parallel_ctx, mode="train"):
+    """Block 0 + the scanned segments under ONE shard_map with explicit
+    Megatron-style partial sums — the paper's Fig 2 on the real model.
+
+    Weights enter through ``launch.mesh.param_specs`` (attention heads + FFN
+    hidden column/row over the model axis, MoE experts over the model axis);
+    activations are replicated over ``model`` and sharded over the data
+    axes.  Inside, blocks see ``parallel_ctx["tp_axis"]`` and compose the
+    partial sums per ``core.fal.attention_must_assemble`` — fal/parallel pay
+    one collective per steady-state block, preln/falplus two, and the
+    unscanned block 0 pays the one extra assemble that exports the
+    first-attention signal.  Returns (x, aux)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.compat import shard_map
+    from repro.launch import mesh as MX
+
+    mesh = parallel_ctx["mesh"]
+    dax = tuple(parallel_ctx["data_axes"])
+    max_ = parallel_ctx["model_axis"]
+    tp_size = mesh.shape[max_]
+    _check_tp_shapes(cfg, tp_size)
+    blocks = {k: p[k] for k in ("block0", "blocks_dense", "blocks_moe")
+              if p.get(k) is not None}
+    kv_rep = (not cfg.use_mla) and cfg.n_kv_heads % tp_size != 0
+    wspecs = MX.param_specs(blocks, cfg,
+                            kv_replicated=kv_rep)  # Megatron, model axis only
+    inner = {"mesh": None, "tp_axis": max_, "tp_size": tp_size,
+             "data_axes": dax, "model_axis": max_}
+    b_ax = dax if dax else None
+
+    def local(bp, x, positions):
+        x, aux = _run_decoder_blocks(bp, cfg, x, positions, inner, mode)
+        if dax:
+            # MoE aux differs per data shard (local routing); make it the
+            # global mean so the out_spec can declare it replicated
+            aux = jax.lax.pmean(aux, dax)
+        return x, aux
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(wspecs, P(b_ax, None, None), P(b_ax, None)),
+                   out_specs=(P(b_ax, None, None), P()),
+                   check_vma=False)
+    return fn(blocks, x, positions)
+
+
+def _run_decoder_blocks(p, cfg, x, positions, parallel_ctx, mode):
+    """Block 0 + the scanned dense/moe segments.  ONE implementation shared
+    by the replicated/GSPMD path and the explicit-TP shard_map local body —
+    the collective structure differs only through the parallel_ctx the
+    blocks see.  Returns (x, aux).
+
+    Block 0 sits outside the layer scan; without its own remat its
+    attention residuals (probs etc.) are stashed for backward
+    (EXPERIMENTS.md §Perf D2)."""
+    wsched = BL.window_schedule(cfg)
+    block0 = _maybe_remat(
+        lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, wsched[0],
+                                     kind=_layer_kind(cfg, 0), is_block0=True,
+                                     parallel_ctx=parallel_ctx, mode=mode),
+        cfg)
+    x, a1_raw, aux, _ = block0(p["block0"], x)
+    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+
+    i = 1
+    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
+        if p.get(name) is not None:
+            n = jax.tree.leaves(p[name])[0].shape[0]
+            ws = jnp.asarray(wsched[i:i + n], jnp.int32)
+            x, aux_s = _run_stack(p[name], cfg, x, a1_sig, positions, ws,
+                                  kind, parallel_ctx, mode)
+            aux += aux_s
+            i += n
+    return x, aux
+
+
 def _run_stack(p_stack, cfg, x, a1_sig, positions, windows, kind,
                parallel_ctx, mode):
     """Scan blocks over stacked params.  Returns (x, aux_sum)."""
@@ -150,30 +275,12 @@ def _decoder_forward(p, cfg, batch, mode, parallel_ctx=None,
     x = _embed_tokens(p, cfg, tokens, positions,
                       batch.get("image_embeds"))
     x = constrain_batch(x, parallel_ctx)
-    wsched = BL.window_schedule(cfg)
-    aux = jnp.zeros((), jnp.float32)
 
-    # block 0 sits outside the layer scan; without its own remat its
-    # attention residuals (probs etc.) are stashed for backward
-    # (EXPERIMENTS.md §Perf D2)
-    block0 = _maybe_remat(
-        lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, wsched[0],
-                                     kind=_layer_kind(cfg, 0), is_block0=True,
-                                     parallel_ctx=parallel_ctx, mode=mode),
-        cfg)
-    x, a1_raw, aux0, _ = block0(p["block0"], x)
-    aux += aux0
-    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
-
-    i = 1
-    for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
-        if name in p and p[name] is not None:
-            n = jax.tree.leaves(p[name])[0].shape[0]
-            ws = jnp.asarray(wsched[i:i + n], jnp.int32)
-            x, aux_s = _run_stack(p[name], cfg, x, a1_sig, positions, ws,
-                                  kind, parallel_ctx, mode)
-            aux += aux_s
-            i += n
+    if use_explicit_tp(parallel_ctx):
+        x, aux = decoder_stack_tp(p, cfg, x, positions, parallel_ctx, mode)
+    else:
+        x, aux = _run_decoder_blocks(p, cfg, x, positions, parallel_ctx,
+                                     mode)
 
     if want == "hidden":
         return None, aux, {"hidden": x}

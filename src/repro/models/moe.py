@@ -122,6 +122,49 @@ def moe_apply(p, cfg, x):
 
 
 # ------------------------------------------------------------------------- #
+# explicit-TP partial-sum path (inside model.decoder_stack_tp's shard_map)
+# ------------------------------------------------------------------------- #
+def moe_apply_partial(p, cfg, x, axis="model"):
+    """Local-expert PARTIAL sum — runs INSIDE an enclosing shard_map.
+
+    ``p`` holds this device's shards: wi/wg/wo are (E_loc, ...) expert slices
+    (experts over the model axis), the router is replicated, and the shared
+    expert (if any) is column/row-sharded like a dense TP MLP.  ``x`` is the
+    replicated-over-model activation.  Every device routes all tokens with
+    the full router, but computes only the experts it owns; tokens whose
+    experts live elsewhere contribute zero here.  The sum over the model
+    axis of the returned tensor equals ``moe_apply`` — so the block-level
+    psum that assembles the MLP (or the fused MHA+MLP psum under fal) also
+    completes the expert combine, with no all-to-all at all.
+
+    x: (B, S, d) -> (y_partial, aux).  ``aux`` is replicated (routing sees
+    identical inputs on every device)."""
+    B, S, d = x.shape
+    E, E_loc = cfg.n_experts, p["wi"].shape[0]
+    T, k = B * S, cfg.top_k
+    C = _capacity(T, k, E, cfg.capacity_factor)
+    x2d = x.reshape(T, d)
+    w, e, aux = _route({"router": p["router"]}, cfg, x2d)
+    ef, pos, valid = _dispatch_indices(e, k, E, C)
+    tok = jnp.repeat(jnp.arange(T), k)
+    lo = jax.lax.axis_index(axis) * E_loc if E_loc != E else 0
+    mine = (ef >= lo) & (ef < lo + E_loc)
+    ok = valid & mine
+    ef_loc = jnp.where(mine, ef - lo, 0)
+    buf = jnp.zeros((E_loc, C, d), x.dtype)
+    buf = buf.at[ef_loc, pos].add(x2d[tok] * ok[:, None].astype(x.dtype))
+    out_buf = _expert_ffn(p["wi"].astype(x.dtype), p["wg"].astype(x.dtype),
+                          p["wo"].astype(x.dtype), buf)
+    gathered = out_buf[ef_loc, pos] * ok[:, None].astype(x.dtype)
+    y = jnp.sum(gathered.reshape(T, k, d) * w[..., None], axis=1)
+    if "shared" in p:
+        # the shared expert arrives as a TP shard (wi/wg column, wo row):
+        # mlp_apply over it is itself a partial sum — fuses into the psum
+        y = y + L.mlp_apply(p["shared"], x2d, "swiglu")
+    return y.reshape(B, S, d), aux
+
+
+# ------------------------------------------------------------------------- #
 # shard_map expert-parallel path (training)
 # ------------------------------------------------------------------------- #
 def moe_apply_sharded(p, cfg, x, mesh, data_axes, model_axis):

@@ -26,6 +26,11 @@ def make_train_step(cfg, ocfg: adamw.AdamWConfig, parallel_ctx=None,
     state = {"params", "opt"}.  ``batch["tokens"]``: (B, S); B is split into
     ``num_microbatches`` sequential microbatches (lax.scan) with gradient
     accumulation — bounds activation (and MoE dispatch-buffer) memory.
+    ``parallel_ctx`` flows unchanged into the model: with ``{"tp":
+    "explicit"}`` the decoder family's loss/grad run through the shard_map
+    partial-sum TP stack (model.decoder_stack_tp) — the paper's per-block
+    collective structure — instead of implicit GSPMD sharding; the psums
+    differentiate, so the same step covers both layouts.
     ``grad_shardings``: NamedSharding tree matching params — pins the
     accumulated-gradient buffer to the param layout (otherwise GSPMD may
     replicate it, which at 671B scale is fatal).
