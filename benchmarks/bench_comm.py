@@ -1,4 +1,4 @@
-"""Paper Fig 2 / Fig 6 / Fig 7 (structural): per-block TP all-reduce counts
+"""Paper Fig 2 / Fig 6 / Fig 7 (structural): per-block TP collective counts
 and bytes, measured on the REAL ``DecoderLM`` block stack lowered through
 ``models/model.py::decoder_stack_tp`` (the production shard_map partial-sum
 path — the toy duplicate-weight stack is gone).  ``hlo_cost.analyze`` is
@@ -6,6 +6,16 @@ while-loop aware, so the scanned layers count once per layer and the
 fal/preln all-reduce-bytes ratio must land on the paper's (L+1)/(2L):
 fal pays one collective per steady-state block plus block 0's extra
 first-attention assemble, preln pays two per block.
+
+With ``sp=True`` the same modes are additionally lowered under the
+sequence-parallel ``ExecutionPlan`` (Megatron-SP LN regions) and the bench
+asserts the layout's contract on the HLO:
+
+  * reduce-op count is preserved — every replicated all-reduce becomes
+    exactly one reduce-scatter (block 0's first-attention export stays the
+    one true all-reduce);
+  * reduce bytes shrink by exactly tp_size —
+    ar_bytes_sp + tp * rs_bytes_sp == ar_bytes_replicated.
 
 Run in a subprocess-free way by forcing host devices BEFORE jax import (the
 harness in run.py does this)."""
@@ -18,38 +28,72 @@ import jax.numpy as jnp
 
 from benchmarks import hlo_cost
 from repro.configs.base import get_config
+from repro.core.plan import ExecutionPlan
 from repro.models import model as M
 from repro.optim import grad_compress
 
 N_LAYERS = 8
+TP = 8
 
 
-def bench(csv):
-    assert len(jax.devices()) >= 8, "run via benchmarks.run (forces devices)"
-    mesh = jax.make_mesh((8,), ("model",))
-    pctx = {"mesh": mesh, "data_axes": (), "model_axis": "model",
-            "tp": "explicit"}
+def _collect(txt):
+    r = hlo_cost.analyze(txt)["collectives"]
+    zero = {"bytes": 0, "count": 0}
+    return {op: r.get(op, zero) for op in
+            ("all-reduce", "reduce-scatter", "all-gather")}
+
+
+def bench(csv, sp=False):
+    assert len(jax.devices()) >= TP, "run via benchmarks.run (forces devices)"
+    mesh = jax.make_mesh((TP,), ("model",))
     cfg0 = get_config("llama3.2-3b").reduced().replace(
         n_layers=N_LAYERS, n_heads=8, n_kv_heads=8)
     B, S = 2, 32
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg0.d_model))
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    rows = {}
+    rows, sp_rows = {}, {}
     for mode in ("preln", "parallel", "fal", "falplus"):
         cfg = cfg0.replace(connection=mode)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
 
-        def fwd(p, x, cfg=cfg):
-            return M.decoder_stack_tp(p, cfg, x, positions, pctx)[0]
+        def lower(plan, cfg=cfg, params=params):
+            def fwd(p, x):
+                return M.decoder_stack_tp(p, cfg, x, positions, plan)[0]
+            t0 = time.time()
+            txt = jax.jit(fwd).lower(params, x).compile().as_text()
+            return _collect(txt), time.time() - t0
 
-        t0 = time.time()
-        txt = jax.jit(fwd).lower(params, x).compile().as_text()
-        lower_s = time.time() - t0
-        r = hlo_cost.analyze(txt)
-        ar = r["collectives"].get("all-reduce", {"bytes": 0, "count": 0})
+        plan = ExecutionPlan.from_mesh(mesh, tp="explicit").validate(cfg)
+        c, lower_s = lower(plan)
+        ar = c["all-reduce"]
         rows[mode] = {"count": ar["count"], "bytes": ar["bytes"]}
         csv(f"comm_fig2_{mode}", lower_s * 1e6,
             f"allreduce_count={ar['count']:.0f};bytes={ar['bytes']:.0f}")
+
+        if sp:
+            plan_sp = ExecutionPlan.from_mesh(mesh, tp="explicit",
+                                              sp=True).validate(cfg)
+            c_sp, lower_s = lower(plan_sp)
+            ar_sp, rs, ag = (c_sp["all-reduce"], c_sp["reduce-scatter"],
+                             c_sp["all-gather"])
+            sp_rows[mode] = {
+                "allreduce": dict(count=ar_sp["count"], bytes=ar_sp["bytes"]),
+                "reduce_scatter": dict(count=rs["count"], bytes=rs["bytes"]),
+                "all_gather": dict(count=ag["count"], bytes=ag["bytes"]),
+            }
+            csv(f"comm_sp_{mode}", lower_s * 1e6,
+                f"rs_bytes={rs['bytes']:.0f};ag_bytes={ag['bytes']:.0f};"
+                f"ar_bytes={ar_sp['bytes']:.0f}")
+            # the SP contract: reduce-op count preserved, reduce bytes / tp
+            assert ar_sp["count"] + rs["count"] == ar["count"], \
+                (mode, c_sp, ar)
+            assert ar_sp["bytes"] + TP * rs["bytes"] == ar["bytes"], (
+                f"{mode}: SP reduce bytes not cut by tp={TP}: "
+                f"ar_sp={ar_sp['bytes']} + {TP}*rs={rs['bytes']} != "
+                f"ar_replicated={ar['bytes']}")
+            csv(f"comm_sp_{mode}_bytes_reduction", 0,
+                f"{ar['bytes'] / max(rs['bytes'] + ar_sp['bytes'], 1):.3f}")
+
     # the paper's claim: fal ~ half of preln (steady state; block0 pays one
     # extra assemble -> (L+1)/(2L))
     ratio = rows["fal"]["bytes"] / max(rows["preln"]["bytes"], 1)
@@ -69,8 +113,9 @@ def bench(csv):
         payloads[method] = b
         csv(f"comm_fig7_payload_{method}", 0, str(b))
 
-    return {"model": cfg0.arch_id, "n_layers": N_LAYERS,
+    return {"model": cfg0.arch_id, "n_layers": N_LAYERS, "tp_size": TP,
             "batch": B, "seq": S, "d_model": cfg0.d_model,
             "allreduce_per_mode": rows,
+            "sp": sp_rows,
             "ratio_fal_over_preln": ratio, "ratio_expected": expected,
             "fig7_payload_bytes": payloads}

@@ -38,6 +38,10 @@ def main() -> None:
                     help="write BENCH_<suite>.json for suites returning data")
     ap.add_argument("--json-dir", default=".",
                     help="directory for the --json output files")
+    ap.add_argument("--sp", action="store_true",
+                    help="comm suite: also lower the sequence-parallel "
+                         "ExecutionPlan per mode and assert the tp_size "
+                         "reduce-bytes reduction")
     args = ap.parse_args()
 
     def csv(name, us, derived=""):
@@ -48,7 +52,7 @@ def main() -> None:
 
     steps = 300 if args.full else 100
     suites = {
-        "comm": lambda: bench_comm.bench(csv),
+        "comm": lambda: bench_comm.bench(csv, sp=args.sp),
         "throughput": lambda: bench_throughput.bench(csv),
         "quality": lambda: bench_quality.bench(csv, steps=steps),
         "quality_compress": lambda: bench_quality.bench_compress(

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core.plan import ExecutionPlan
 from repro.models import model as M
 from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
 
@@ -19,9 +20,12 @@ params = M.init_params(jax.random.PRNGKey(0), cfg)
 rng = np.random.default_rng(42)
 
 # --- submit 10 ragged requests through 4 slots -----------------------------
+# the engine stores a typed ExecutionPlan (phase is pinned to 'paged' for
+# every jitted dispatch it compiles); single_device() = no mesh, no TP
+plan = ExecutionPlan.single_device()
 ecfg = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
                     max_seq=128)
-engine = PagedEngine(cfg, params, ecfg)
+engine = PagedEngine(cfg, params, ecfg, plan=plan)
 prompts = [rng.integers(0, cfg.vocab, 4 + i % 7) for i in range(10)]
 for i, p in enumerate(prompts):
     engine.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
@@ -40,7 +44,7 @@ for r in sorted(done, key=lambda r: r.rid)[:3]:
 # --- correctness: batched == lone ------------------------------------------
 lone = PagedEngine(cfg, params, EngineConfig(page_size=8, num_pages=48,
                                              slots=1, prefill_chunk=8,
-                                             max_seq=128))
+                                             max_seq=128), plan=plan)
 probe = sorted(done, key=lambda r: r.rid)[0]
 lone.submit(ServeRequest(rid=0, prompt=probe.prompt,
                          max_new=len(probe.generated)))

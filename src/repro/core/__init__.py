@@ -1,3 +1,7 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+# The typed execution plan is the package's public entry point for
+# selecting phase / TP style / sequence parallelism (see core/plan.py).
+from repro.core.plan import ExecutionPlan, Phase, TPStyle  # noqa: F401

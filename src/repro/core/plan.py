@@ -1,0 +1,300 @@
+"""ExecutionPlan — the typed parallel-execution plan for the whole stack.
+
+The paper's contribution is a *communication structure* (one fused MHA+MLP
+all-reduce per FAL block instead of preln's two), and the structure a run
+uses is a property of the whole program, not of one call site.  This module
+makes that structure an explicit, validated object:
+
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit", sp=True)
+    plan.validate(cfg)                      # loud errors, before tracing
+    model.forward(params, cfg, batch, plan)
+
+replacing the stringly-typed ``parallel_ctx`` dict (``{"mesh", "data_axes",
+"model_axis", "tp": "explicit"}``) that used to thread through model, train,
+launch, and serving code unvalidated.
+
+Plan axes:
+
+* ``phase``  — train | eval | prefill | decode | paged.  What used to be
+  the ``mode=`` string argument of ``model.forward`` / ``blocks.block_apply``
+  and the serving engines.
+* ``tp``     — none | gspmd | explicit.  ``explicit`` routes the decoder
+  family through the shard_map partial-sum stack
+  (``models/model.py::decoder_stack_tp``) realising the paper's per-block
+  collective fork; ``gspmd`` lets XLA shard against ``launch/mesh.py``'s
+  PartitionSpecs.
+* ``sequence_parallel`` — Megatron-SP-style LN regions under explicit TP:
+  inter-block activations stay sharded over the model axis along the
+  sequence dimension; blocks pay reduce-scatter/all-gather pairs instead of
+  all-reduces (same reduce-collective count, per-block reduce bytes cut by
+  ``tp_size``; ``models/blocks.py``).
+
+Inside the explicit-TP shard_map the blocks see ``plan.inner()`` — the same
+plan with ``mesh=None`` and ``local_tp_size`` set; ``plan.tp_axis`` is then
+the axis the partial-sum psums reduce over (None on replicated/GSPMD paths).
+
+The legacy dict survives for one release as a shim:
+``ExecutionPlan.from_legacy_dict`` (and every public entry point accepting a
+plan) converts ``parallel_ctx``-style dicts with a DeprecationWarning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import warnings
+from typing import Any, Optional, Tuple
+
+
+class Phase(enum.Enum):
+    """Execution phase — what used to be the ``mode=`` string."""
+    TRAIN = "train"
+    EVAL = "eval"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    PAGED = "paged"
+
+    @classmethod
+    def coerce(cls, v) -> "Phase":
+        if isinstance(v, Phase):
+            return v
+        try:
+            return cls(v)
+        except ValueError:
+            raise ValueError(
+                f"unknown phase {v!r}; valid: "
+                f"{[p.value for p in cls]}") from None
+
+
+#: phases that run the full-sequence block path (vs KV-cache decode/paged)
+FULL_SEQUENCE_PHASES = (Phase.TRAIN, Phase.EVAL, Phase.PREFILL)
+
+
+class TPStyle(enum.Enum):
+    """Tensor-parallel style."""
+    NONE = "none"
+    GSPMD = "gspmd"
+    EXPLICIT = "explicit"
+
+    @classmethod
+    def coerce(cls, v) -> "TPStyle":
+        if isinstance(v, TPStyle):
+            return v
+        if v is None:
+            return cls.NONE
+        try:
+            return cls(v)
+        except ValueError:
+            raise ValueError(
+                f"unknown TP style {v!r}; valid: "
+                f"{[t.value for t in cls]}") from None
+
+
+#: families with an explicit partial-sum TP stack (decoder_stack_tp)
+EXPLICIT_TP_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Frozen description of how one program executes.
+
+    ``mesh``/``data_axes``/``model_axis`` describe the device layout;
+    ``local_tp_size`` is non-zero only on the plan a shard_map local body
+    sees (``inner()``), where ``mesh`` is None by construction.
+    """
+    phase: Phase = Phase.TRAIN
+    tp: TPStyle = TPStyle.NONE
+    sequence_parallel: bool = False
+    mesh: Any = None                       # jax.sharding.Mesh | None
+    data_axes: Tuple[str, ...] = ()
+    model_axis: str = "model"
+    local_tp_size: int = 0                 # set only by inner()
+
+    # ------------------------------------------------------------- build --
+    @classmethod
+    def single_device(cls, phase=Phase.TRAIN) -> "ExecutionPlan":
+        """Replicated single-program plan (no mesh, no TP)."""
+        return cls(phase=Phase.coerce(phase))
+
+    @classmethod
+    def from_mesh(cls, mesh, *, tp="gspmd", sp: bool = False,
+                  phase=Phase.TRAIN, model_axis: str = "model",
+                  data_axes: Optional[Tuple[str, ...]] = None
+                  ) -> "ExecutionPlan":
+        """Plan over ``mesh``.  ``data_axes`` defaults to every mesh axis
+        except ``model_axis`` (so a ("pod", "data", "model") mesh composes
+        pure DP across pods automatically)."""
+        if data_axes is None:
+            data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+        return cls(phase=Phase.coerce(phase), tp=TPStyle.coerce(tp),
+                   sequence_parallel=bool(sp), mesh=mesh,
+                   data_axes=tuple(data_axes), model_axis=model_axis)
+
+    @classmethod
+    def from_legacy_dict(cls, d: dict, phase=Phase.TRAIN) -> "ExecutionPlan":
+        """Shim: convert a legacy ``parallel_ctx`` dict.  One release only."""
+        warnings.warn(
+            "parallel_ctx dicts are deprecated; construct an "
+            "ExecutionPlan (core.plan) instead", DeprecationWarning,
+            stacklevel=2)
+        known = {"mesh", "data_axes", "model_axis", "tp", "tp_axis",
+                 "tp_size"}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"legacy parallel_ctx has unknown keys "
+                             f"{sorted(unknown)}; known: {sorted(known)}")
+        mesh = d.get("mesh")
+        tp = TPStyle.EXPLICIT if d.get("tp") == "explicit" else (
+            TPStyle.GSPMD if mesh is not None else TPStyle.NONE)
+        if d.get("tp") not in (None, "explicit", "gspmd"):
+            raise ValueError(f"legacy parallel_ctx tp={d['tp']!r} "
+                             f"(expected 'explicit' or 'gspmd')")
+        return cls(phase=Phase.coerce(phase), tp=tp, mesh=mesh,
+                   data_axes=tuple(d.get("data_axes") or ()),
+                   model_axis=d.get("model_axis", "model"),
+                   local_tp_size=int(d.get("tp_size", 0))
+                   if d.get("tp_axis") is not None else 0)
+
+    def to_legacy_dict(self) -> dict:
+        """Inverse of :meth:`from_legacy_dict` (round-trip tested).  Raises
+        for plans a legacy dict cannot express — silently degrading an SP
+        plan to the replicated layout would mislabel any numbers collected
+        under it."""
+        if self.sequence_parallel:
+            raise ValueError(
+                "sequence_parallel plans cannot be expressed as a legacy "
+                "parallel-ctx dict; pass the ExecutionPlan itself")
+        d = {"mesh": self.mesh, "data_axes": tuple(self.data_axes),
+             "model_axis": self.model_axis}
+        if self.tp is TPStyle.EXPLICIT:
+            d["tp"] = "explicit"
+        if self.local_tp_size:
+            d["tp_axis"] = self.model_axis
+            d["tp_size"] = self.local_tp_size
+        return d
+
+    @classmethod
+    def resolve(cls, plan, legacy=None) -> "ExecutionPlan":
+        """Entry-point coercion for every public API taking a plan.
+
+        Accepts an ExecutionPlan, a Phase (or its string value — the old
+        ``mode=`` calling convention), a legacy parallel_ctx dict (shimmed,
+        DeprecationWarning), or None (single device, train).  ``legacy`` is
+        the old positional ``parallel_ctx`` slot so pre-plan call shapes
+        like ``forward(params, cfg, batch, "train", {...})`` keep working.
+        """
+        if isinstance(plan, ExecutionPlan):
+            if legacy is not None:
+                raise ValueError("pass either a plan or a legacy dict, "
+                                 "not both")
+            return plan
+        if isinstance(plan, dict):
+            return cls.from_legacy_dict(plan)
+        phase = Phase.coerce(plan) if plan is not None else Phase.TRAIN
+        if legacy is None:
+            return cls.single_device(phase)
+        if isinstance(legacy, ExecutionPlan):
+            return legacy.with_phase(phase)
+        return cls.from_legacy_dict(legacy, phase=phase)
+
+    # -------------------------------------------------------- derived -----
+    def with_phase(self, phase) -> "ExecutionPlan":
+        return dataclasses.replace(self, phase=Phase.coerce(phase))
+
+    def inner(self) -> "ExecutionPlan":
+        """The plan a shard_map local body sees: no mesh (collectives are
+        explicit inside), ``local_tp_size`` pinned to the model-axis size."""
+        return dataclasses.replace(self, mesh=None,
+                                   local_tp_size=self.tp_size)
+
+    @property
+    def tp_size(self) -> int:
+        if self.local_tp_size:
+            return self.local_tp_size
+        if self.mesh is not None and self.model_axis in self.mesh.axis_names:
+            return int(self.mesh.shape[self.model_axis])
+        return 1
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        """Mesh axis name the block kernels psum partial sums over — set
+        only INSIDE the explicit-TP shard_map; None on replicated/GSPMD
+        paths (``blocks._assemble`` is then the identity)."""
+        return self.model_axis if self.local_tp_size else None
+
+    @property
+    def use_explicit_tp(self) -> bool:
+        """True when the caller asked for the explicit partial-sum TP path
+        (shard_map over the block stack) instead of implicit GSPMD."""
+        return self.tp is TPStyle.EXPLICIT and self.mesh is not None
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def full_sequence(self) -> bool:
+        return self.phase in FULL_SEQUENCE_PHASES
+
+    @property
+    def is_training_like(self) -> bool:
+        """Train/eval: loss-path execution (e.g. the sharded-MoE dispatch
+        is worth its collectives; decode token counts are not)."""
+        return self.phase in (Phase.TRAIN, Phase.EVAL)
+
+    # -------------------------------------------------------- validate ----
+    def validate(self, cfg) -> "ExecutionPlan":
+        """Fail loudly — before any tracing — when the plan cannot execute
+        ``cfg``.  Returns self so call sites can chain."""
+        if self.sequence_parallel and self.tp is not TPStyle.EXPLICIT:
+            raise ValueError(
+                "sequence_parallel=True requires tp='explicit': SP shards "
+                "inter-block activations inside the explicit partial-sum "
+                "shard_map stack; there is no GSPMD/replicated SP path")
+        if self.sequence_parallel and self.phase not in FULL_SEQUENCE_PHASES:
+            raise ValueError(
+                f"sequence_parallel=True is a full-sequence layout "
+                f"(train/eval/prefill); phase={self.phase.value} decodes "
+                f"single tokens against KV caches")
+        if self.tp is TPStyle.EXPLICIT:
+            if self.mesh is None:
+                raise ValueError("tp='explicit' requires a mesh (the "
+                                 "explicit-TP stack shards over it)")
+            if cfg.family not in EXPLICIT_TP_FAMILIES:
+                raise ValueError(
+                    f"tp='explicit': family '{cfg.family}' has no "
+                    f"explicit-TP stack (decoder family only: "
+                    f"{EXPLICIT_TP_FAMILIES}) — running it would silently "
+                    f"fall back to GSPMD and mislabel any numbers")
+            self._check_divisibility(cfg)
+        if self.mesh is not None:
+            names = tuple(self.mesh.axis_names)
+            if self.model_axis not in names:
+                raise ValueError(f"model_axis '{self.model_axis}' not in "
+                                 f"mesh axes {names}")
+            bad = [a for a in self.data_axes if a not in names]
+            if bad:
+                raise ValueError(f"data_axes {bad} not in mesh axes {names}")
+        return self
+
+    def _check_divisibility(self, cfg):
+        """Explicit TP shards heads/hidden/experts evenly — fail loudly when
+        the config doesn't divide (GSPMD pads; shard_map in_specs cannot)."""
+        tp_size = self.tp_size
+
+        def div(n, what):
+            if n % tp_size:
+                raise ValueError(f"explicit TP: {what}={n} is not divisible "
+                                 f"by tp_size={tp_size}")
+        div(cfg.n_heads, "n_heads")
+        if not cfg.use_mla and cfg.n_kv_heads % tp_size \
+                and tp_size % cfg.n_kv_heads:
+            # n_kv_heads < tp_size is fine when groups align (KV
+            # replication, attention._kv_group_slice); anything else cannot
+            # shard evenly
+            raise ValueError(f"explicit TP: n_kv_heads={cfg.n_kv_heads} "
+                             f"divides neither way with tp_size={tp_size}")
+        div(cfg.dense_d_ff or cfg.d_ff, "d_ff")
+        if cfg.n_experts:
+            div(cfg.n_experts, "n_experts")
+            if cfg.n_shared_experts:
+                div(cfg.moe_d_ff * cfg.n_shared_experts, "shared-expert d_ff")

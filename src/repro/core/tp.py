@@ -4,22 +4,27 @@ The explicit partial-sum TP execution itself lives with the model now:
 ``models/blocks.py::block_apply`` composes head-/hidden-/expert-sharded
 local kernels per ``core/fal.py::attention_must_assemble`` and
 ``models/model.py::decoder_stack_tp`` drives the whole block stack under one
-shard_map (the toy duplicate-weight stack that used to live here is gone).
-Per transformer block and connection mode the collective structure is the
-paper's Fig 2:
+shard_map, selected by an explicit-TP ``core.plan.ExecutionPlan`` (the toy
+duplicate-weight stack that used to live here is gone).  Per transformer
+block and connection mode the collective structure is the paper's Fig 2:
 
   preln / falplus : all-reduce(MHA partial) -> MLP -> all-reduce(MLP) = 2
   fal / parallel  : MHA partial + MLP partial added LOCALLY -> ONE all-reduce
   block 0 (fal)   : one extra assemble to export the first-attention signal
                     -> (L+1)/(2L) all-reduce bytes vs preln over L layers
 
+With ``ExecutionPlan(sequence_parallel=True)`` the same structure lowers in
+the Megatron-SP layout: every all-reduce above becomes a reduce-scatter at
+1/tp the bytes behind an all-gather of the LN region (block 0's signal
+export stays the one true all-reduce).
+
 This module keeps what is reusable across tests and benchmarks:
 
   * ``make_tp_forward`` — thin wrapper that builds a real-``DecoderLM``
     block stack (``models/blocks.py`` weights, GQA attention, cfg.mlp FFN)
     and returns (init_fn, jitted forward) running ``decoder_stack_tp`` on a
-    given mesh — the structural harness for asserting the halving on
-    lowered HLO without hardware.
+    given mesh — the structural harness for asserting the halving (and the
+    SP bytes reduction, ``sp=True``) on lowered HLO without hardware.
   * ``count_collectives`` / ``collective_bytes`` — HLO-text parsers for
     collective op counts and payload bytes (scan bodies counted once; use
     ``benchmarks.hlo_cost.analyze`` for trip-count-aware totals).
@@ -42,21 +47,25 @@ def bench_stack_config(n_layers, d, d_ff, n_heads, mode):
         param_dtype="float32", remat=False, attn_block_q=64)
 
 
-def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model"):
+def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model",
+                    sp=False):
     """(init_fn, jitted forward) for an n_layer unified-block TP stack.
 
     The params are real ``models/blocks.py`` block weights (the same trees
     ``DecoderLM`` trains); the forward is ``models/model.py::
-    decoder_stack_tp`` on ``mesh`` — so HLO lowered from here IS the
-    production collective structure, not a toy's.
+    decoder_stack_tp`` on ``mesh`` under an explicit-TP ``ExecutionPlan``
+    — so HLO lowered from here IS the production collective structure, not
+    a toy's.  ``sp=True`` lowers the sequence-parallel layout (activations
+    sharded over ``axis`` along the sequence; reduce-scatter/all-gather
+    pairs instead of all-reduces).
     """
+    from repro.core.plan import ExecutionPlan
     from repro.models import blocks as BL
     from repro.models import model as M
 
     cfg = bench_stack_config(n_layers, d, d_ff, n_heads, mode)
-    dax = tuple(a for a in mesh.axis_names if a != axis)
-    pctx = {"mesh": mesh, "data_axes": dax, "model_axis": axis,
-            "tp": "explicit"}
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit", sp=sp,
+                                   model_axis=axis).validate(cfg)
 
     def init_fn(key):
         k0, ks = jax.random.split(key)
@@ -70,7 +79,7 @@ def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model"):
     def fwd(params, x):
         B, S = x.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-        y, _ = M.decoder_stack_tp(params, cfg, x, positions, pctx)
+        y, _ = M.decoder_stack_tp(params, cfg, x, positions, plan)
         return y
 
     return init_fn, jax.jit(fwd)

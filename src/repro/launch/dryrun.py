@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, \
     shape_applicable
+from repro.core.plan import ExecutionPlan, Phase
 from repro.launch import mesh as MX
 from repro.launch import specs as SP
 from repro.serve.decode import make_serve_step
@@ -35,10 +36,13 @@ def _fsdp_axes(cfg, mesh):
 
 
 def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
-               extra_overrides=None, tp="gspmd"):
+               extra_overrides=None, tp="gspmd", sp=False):
     """Returns (lowered, compiled, info dict).  ``tp="explicit"`` routes the
     decoder family through the shard_map partial-sum stack
-    (model.decoder_stack_tp) instead of implicit GSPMD sharding."""
+    (model.decoder_stack_tp) instead of implicit GSPMD sharding;
+    ``sp=True`` additionally shards inter-block activations over the model
+    axis (sequence-parallel LN regions; full-sequence train/prefill shapes
+    — decode shapes are skipped)."""
     shape_cfg = INPUT_SHAPES[shape_name]
     cfg = get_config(arch)
     cfg = SP.dryrun_overrides(cfg, shape_cfg)
@@ -49,14 +53,14 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
     ok, why = shape_applicable(cfg, shape_cfg)
     if not ok:
         return None, None, {"skipped": why}
+    if sp and shape_cfg.mode == "decode":
+        return None, None, {"skipped": "sequence-parallel LN regions are a "
+                                       "full-sequence (train/prefill) "
+                                       "layout; decode ticks are 1-token"}
 
     fax = _fsdp_axes(cfg, mesh) if fsdp else ()
-    parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
-                    "model_axis": MX.MODEL}
-    if tp == "explicit":
-        from repro.models.model import require_explicit_tp
-        require_explicit_tp(cfg)
-        parallel_ctx["tp"] = "explicit"
+    plan = ExecutionPlan.from_mesh(mesh, tp=tp, sp=sp,
+                                   model_axis=MX.MODEL).validate(cfg)
 
     with mesh:
         if shape_cfg.mode == "train":
@@ -65,7 +69,7 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
                 cfg, shape_cfg, mesh, fax)
             gshard = jax.tree.map(lambda s: s.sharding, state_sds["params"])
             step = tstep.make_train_step(cfg, SP.opt_cfg_for(cfg),
-                                         parallel_ctx, nmb,
+                                         plan, nmb,
                                          grad_shardings=gshard)
             out_sh = jax.tree.map(lambda s: s.sharding, state_sds)
             lowered = jax.jit(
@@ -74,10 +78,10 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
             # prefill lowers the forward pass; decode lowers serve_step
             if shape_cfg.mode == "prefill":
                 from repro.models import model as M
+                pre_plan = plan.with_phase(Phase.PREFILL)
 
                 def prefill(params, batch):
-                    logits, aux, _ = M.forward(params, cfg, batch, "prefill",
-                                               parallel_ctx)
+                    logits, aux, _ = M.forward(params, cfg, batch, pre_plan)
                     return logits
 
                 params_sds, _, _, _ = SP.decode_input_specs(
@@ -85,7 +89,7 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
                 batch_sds = SP.batch_struct(cfg, shape_cfg, mesh)
                 lowered = jax.jit(prefill).lower(params_sds, batch_sds)
             else:
-                serve = make_serve_step(cfg, parallel_ctx)
+                serve = make_serve_step(cfg, plan)
                 params_sds, cache_sds, tok, pos = SP.decode_input_specs(
                     cfg, shape_cfg, mesh, fax)
                 cache_sh = jax.tree.map(lambda s: s.sharding, cache_sds)
@@ -104,6 +108,7 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
         "arch": arch, "shape": shape_name,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "connection": cfg.connection, "fsdp": bool(fax),
+        "tp": tp, "sp": bool(sp),
         "compile_s": round(compile_s, 1),
         "memory": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -119,13 +124,13 @@ def lower_pair(arch, shape_name, mesh, *, connection=None, fsdp=True,
 
 def run_one(arch, shape_name, mesh_kind, out_dir=None, connection=None,
             fsdp=True, save_hlo=True, extra_overrides=None, tag_suffix="",
-            tp="gspmd"):
+            tp="gspmd", sp=False):
     mesh = MX.make_production_mesh(multi_pod=(mesh_kind == "multi"))
     try:
         lowered, compiled, info = lower_pair(arch, shape_name, mesh,
                                              connection=connection, fsdp=fsdp,
                                              extra_overrides=extra_overrides,
-                                             tp=tp)
+                                             tp=tp, sp=sp)
     except Exception as e:  # noqa
         info = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                 "error": f"{type(e).__name__}: {e}",
@@ -159,12 +164,21 @@ def main():
     ap.add_argument("--tp", default="gspmd", choices=["gspmd", "explicit"],
                     help="explicit = shard_map partial-sum TP stack "
                          "(decoder family, train shapes)")
+    ap.add_argument("--sp", action="store_true",
+                    help="with --tp explicit: sequence-parallel LN regions "
+                         "(activations sharded over the model axis; "
+                         "reduce-scatter/all-gather instead of all-reduce)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--no-hlo", action="store_true")
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     help="config override key=value (repeatable), e.g. "
                          "--set attn_shard=sequence --set route_groups=16")
     args = ap.parse_args()
+
+    if args.sp and args.tp != "explicit":
+        ap.error("--sp requires --tp explicit (sequence-parallel LN "
+                 "regions live inside the explicit partial-sum shard_map "
+                 "stack)")
 
     overrides = {}
     for kv in args.overrides:
@@ -194,7 +208,7 @@ def main():
                                          tag_suffix="_".join(
                                              f"{k}-{v}" for k, v in
                                              overrides.items())[:40],
-                                         tp=args.tp)
+                                         tp=args.tp, sp=args.sp)
                 if "skipped" in info:
                     print(f"SKIP  {arch:24s} {shape:12s} {mk}: "
                           f"{info['skipped']}", flush=True)

@@ -13,9 +13,12 @@ replicated over ``model`` (sharded over batch only; DESIGN.md §4).  Stacked
 
 These specs serve double duty: GSPMD layout hints for the implicit path,
 and the shard_map ``in_specs`` of the explicit partial-sum TP stack
-(``models/model.py::decoder_stack_tp`` — pass ``tp="explicit"`` in the
-parallel_ctx).  The column/row orientation is what makes the blocks' local
-kernels return partial sums there.
+(``models/model.py::decoder_stack_tp`` — select it with
+``core.plan.ExecutionPlan.from_mesh(mesh, tp="explicit")``; add ``sp=True``
+for the sequence-parallel LN-region layout, where the activation specs put
+the sequence dim on ``model`` instead of replicating it).  The column/row
+orientation is what makes the blocks' local kernels return partial sums
+there.
 """
 from __future__ import annotations
 

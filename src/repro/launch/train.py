@@ -28,6 +28,11 @@ def main():
     ap.add_argument("--tp", default="gspmd", choices=["gspmd", "explicit"],
                     help="with --mesh: explicit = shard_map partial-sum TP "
                          "stack (the paper's per-block collective structure)")
+    ap.add_argument("--sp", action="store_true",
+                    help="with --tp explicit: Megatron-SP sequence-parallel "
+                         "LN regions — inter-block activations sharded over "
+                         "the model axis, reduce-scatter/all-gather pairs "
+                         "instead of all-reduces (1/tp the reduce bytes)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -38,6 +43,7 @@ def main():
 
     import jax
     from repro.configs.base import get_config
+    from repro.core.plan import ExecutionPlan
     from repro.launch import mesh as MX
     from repro.train import trainer
 
@@ -47,25 +53,28 @@ def main():
     if args.connection:
         cfg = cfg.replace(connection=args.connection)
 
-    parallel_ctx = None
     in_shardings = None
     if args.tp == "explicit" and not args.mesh:
         raise ValueError("--tp explicit requires --mesh (the explicit-TP "
                          "stack shards over the production mesh)")
+    if args.sp and (args.tp != "explicit" or not args.mesh):
+        raise ValueError("--sp requires --mesh and --tp explicit "
+                         "(sequence-parallel LN regions live inside the "
+                         "explicit partial-sum shard_map stack)")
     if args.mesh:
         mesh = MX.make_production_mesh(multi_pod=(args.mesh == "multi"))
-        parallel_ctx = {"mesh": mesh, "data_axes": MX.data_axes_of(mesh),
-                        "model_axis": MX.MODEL}
-        if args.tp == "explicit":
-            from repro.models.model import require_explicit_tp
-            require_explicit_tp(cfg)
-            parallel_ctx["tp"] = "explicit"
+        plan = ExecutionPlan.from_mesh(mesh, tp=args.tp, sp=args.sp,
+                                       model_axis=MX.MODEL)
+    else:
+        plan = ExecutionPlan.single_device()
+    plan.validate(cfg)   # loud errors before any tracing
 
     print(f"training {cfg.arch_id} connection={cfg.connection} "
-          f"layers={cfg.n_layers} d={cfg.d_model}", flush=True)
+          f"layers={cfg.n_layers} d={cfg.d_model} tp={plan.tp.value} "
+          f"sp={plan.sequence_parallel}", flush=True)
     state, hist = trainer.train(
         cfg, steps=args.steps, batch=args.batch, seq_len=args.seq,
-        lr=args.lr, seed=args.seed, parallel_ctx=parallel_ctx,
+        lr=args.lr, seed=args.seed, plan=plan,
         num_microbatches=args.microbatches, schedule=args.schedule,
         ckpt_dir=args.ckpt)
     print(f"final loss {hist[-1]['loss']:.4f}")

@@ -236,7 +236,7 @@ def gqa_qkv(p, cfg, x, positions, kv_x=None, rope=True):
     return q, k, v
 
 
-def sequence_parallel_attention(q, k, v, cfg, pctx, *, causal=True,
+def sequence_parallel_attention(q, k, v, cfg, plan, *, causal=True,
                                 window=0):
     """Context-parallel attention (beyond-paper, EXPERIMENTS.md §Perf P1).
 
@@ -247,7 +247,7 @@ def sequence_parallel_attention(q, k, v, cfg, pctx, *, causal=True,
     all-reduces GSPMD emits when kv-heads don't divide the model axis.
     """
     from jax.sharding import PartitionSpec as P
-    mesh, dax, max_ = pctx["mesh"], pctx["data_axes"], pctx["model_axis"]
+    mesh, dax, max_ = plan.mesh, plan.data_axes, plan.model_axis
     M = mesh.shape[max_]
     S = q.shape[1]
     assert S % M == 0, (S, M)
@@ -270,36 +270,39 @@ def sequence_parallel_attention(q, k, v, cfg, pctx, *, causal=True,
     return fn(q, k, v, jnp.asarray(window, jnp.int32))
 
 
-def _use_seq_parallel(cfg, pctx, S):
-    if cfg.attn_shard != "sequence" or not pctx or pctx.get("mesh") is None:
+def _use_seq_parallel(cfg, plan, S):
+    """Context-parallel attention opt-in (cfg.attn_shard == 'sequence');
+    distinct from plan.sequence_parallel (Megatron-SP LN regions, which
+    runs inside the explicit-TP shard_map where plan.mesh is None)."""
+    if cfg.attn_shard != "sequence" or plan is None or plan.mesh is None:
         return False
-    return S % pctx["mesh"].shape[pctx["model_axis"]] == 0
+    return S % plan.mesh.shape[plan.model_axis] == 0
 
 
-def _kv_group_slice(k, v, cfg, pctx):
+def _kv_group_slice(k, v, cfg, plan):
     """Megatron GQA fallback for n_kv_heads < tp_size inside the explicit-TP
     shard_map: wk/wv arrive REPLICATED (launch.mesh kv_replicated specs),
     every device computes all KV heads cheaply and slices the one its query
     heads attend to (tp_size/n_kv_heads devices share each KV head)."""
-    if pctx is None or pctx.get("tp_axis") is None:
+    if plan is None or plan.tp_axis is None:
         return k, v
-    tp = pctx.get("tp_size", 1)
+    tp = plan.tp_size
     if cfg.n_kv_heads % tp == 0:
         return k, v          # kv heads are sharded like query heads
     rep = tp // cfg.n_kv_heads
-    idx = jax.lax.axis_index(pctx["tp_axis"]) // rep
+    idx = jax.lax.axis_index(plan.tp_axis) // rep
     return (jax.lax.dynamic_slice_in_dim(k, idx, 1, axis=2),
             jax.lax.dynamic_slice_in_dim(v, idx, 1, axis=2))
 
 
-def gqa_apply(p, cfg, x, positions, *, window=0, causal=True, pctx=None):
+def gqa_apply(p, cfg, x, positions, *, window=0, causal=True, plan=None):
     """Full-sequence attention (train / prefill). Returns (B,S,D) — a TP
     partial sum when the weights are the explicit-TP shards."""
     q, k, v = gqa_qkv(p, cfg, x, positions)
-    k, v = _kv_group_slice(k, v, cfg, pctx)
+    k, v = _kv_group_slice(k, v, cfg, plan)
     B, S = x.shape[:2]
-    if _use_seq_parallel(cfg, pctx, S):
-        o = sequence_parallel_attention(q, k, v, cfg, pctx, causal=causal,
+    if _use_seq_parallel(cfg, plan, S):
+        o = sequence_parallel_attention(q, k, v, cfg, plan, causal=causal,
                                         window=window)
     else:
         o = blockwise_attention(q, k, v, causal=causal, window=window,
@@ -380,7 +383,7 @@ def _mla_ckv(p, cfg, x, positions):
     return c, kr
 
 
-def mla_apply(p, cfg, x, positions, pctx=None):
+def mla_apply(p, cfg, x, positions, plan=None):
     """Full-sequence MLA (train / prefill): expand k,v; blockwise attention.
 
     Like gqa_apply, head count comes from the (possibly head-sharded)
@@ -397,9 +400,9 @@ def mla_apply(p, cfg, x, positions, pctx=None):
     k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :],
                                                   (B, S, H, dr))], -1)
     scale = (dn + dr) ** -0.5
-    if _use_seq_parallel(cfg, pctx, S):
+    if _use_seq_parallel(cfg, plan, S):
         # note: v head dim != qk head dim is fine (shard_map is shape-blind)
-        o = sequence_parallel_attention(q, k, v, cfg, pctx, causal=True)
+        o = sequence_parallel_attention(q, k, v, cfg, plan, causal=True)
     else:
         o = blockwise_attention(q, k, v, causal=True, scale=scale,
                                 block_q=cfg.attn_block_q)

@@ -2,6 +2,15 @@
 
 A block is:  x + MHA(ln1(x)) + FFN(mlp_input)   with optional gemma2-style
 post-norms, MoE FFN, MLA attention, and cross-attention (whisper decoder).
+
+Execution is driven by an ``ExecutionPlan`` (core/plan.py): ``plan.phase``
+picks the full-sequence / decode / paged attention path, and inside the
+explicit-TP shard_map (``plan.tp_axis`` set) this module owns the paper's
+per-block collective structure — including the Megatron-SP sequence-parallel
+variant (``plan.sequence_parallel``) where the residual stream between
+blocks stays sharded over the model axis along the sequence dimension and
+every all-reduce becomes a reduce-scatter (1/tp the reduce bytes) paired
+with an all-gather around the LN regions.
 """
 from __future__ import annotations
 
@@ -9,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fal
+from repro.core.plan import ExecutionPlan, Phase
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
@@ -42,62 +52,70 @@ def block_init(key, cfg, *, kind="dense", cross=False, is_block0=False):
     return p
 
 
-def _tp_axis(parallel_ctx):
-    """Mesh axis name when running INSIDE the explicit-TP shard_map
-    (model.decoder_stack_tp); None on the replicated / GSPMD paths."""
-    return parallel_ctx.get("tp_axis") if parallel_ctx else None
-
-
 def _assemble(partial, axis):
     """All-reduce a TP partial sum over ``axis``; identity when replicated.
     tp_size = 1 is the degenerate psum — one code path, not two."""
     return jax.lax.psum(partial, axis) if axis is not None else partial
 
 
-def _ffn_apply(p, cfg, h, kind, parallel_ctx, mode):
+def _ffn_apply(p, cfg, h, kind, plan: ExecutionPlan):
     """Returns (y, aux).  Under explicit TP ``y`` is a PARTIAL sum (dense:
     column-sharded wi/wg, row-sharded wo; MoE: local experts only)."""
     if kind == "moe":
-        axis = _tp_axis(parallel_ctx)
+        axis = plan.tp_axis
         if axis is not None:
             return M.moe_apply_partial(p["ffn"], cfg, h, axis)
-        if (parallel_ctx is not None and mode == "train"
-                and parallel_ctx.get("mesh") is not None):
+        if plan.is_training_like and plan.is_sharded:
             fn = (M.moe_apply_shard_slot if cfg.route_groups
                   else M.moe_apply_sharded)
-            return fn(p["ffn"], cfg, h,
-                      parallel_ctx["mesh"],
-                      parallel_ctx["data_axes"],
-                      parallel_ctx["model_axis"])
+            return fn(p["ffn"], cfg, h, plan)
         return M.moe_apply(p["ffn"], cfg, h)
     return L.mlp_apply(p["ffn"], h, cfg.mlp), jnp.zeros((), jnp.float32)
 
 
 def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
-                is_block0=False, parallel_ctx=None, mode="train",
-                enc_out=None, cache=None, pos=None, causal=True,
-                block_tables=None, n_valid=None):
-    """One block, full-sequence (train/prefill), single-token decode, or
-    chunked paged decode/prefill (mode='paged': x is (B, C, D), ``cache`` a
-    page pool, ``block_tables``/``n_valid`` the paged-serving metadata).
+                is_block0=False, plan=None, enc_out=None, cache=None,
+                pos=None, causal=True, block_tables=None, n_valid=None):
+    """One block, full-sequence (train/eval/prefill), single-token decode,
+    or chunked paged decode/prefill (``plan.phase``; for paged, x is
+    (B, C, D), ``cache`` a page pool, ``block_tables``/``n_valid`` the
+    paged-serving metadata).
 
     Returns (x_out, a_raw, aux, new_cache).  ``a_raw`` is this block's MHA
     output (block 0 exports it as the first-attention signal).
 
-    Inside the explicit-TP shard_map (``parallel_ctx["tp_axis"]`` set) the
-    attention and FFN kernels see head-/hidden-/expert-sharded weights and
-    return PARTIAL sums; this function owns the paper's collective
-    structure: modes whose MLP input needs this block's assembled attention
+    Inside the explicit-TP shard_map (``plan.tp_axis`` set) the attention
+    and FFN kernels see head-/hidden-/expert-sharded weights and return
+    PARTIAL sums; this function owns the paper's collective structure:
+    modes whose MLP input needs this block's assembled attention
     (``fal.attention_must_assemble``) pay two all-reduces, everything else
     adds the MHA and MLP partials locally and pays ONE fused all-reduce
     (Fig 2's 2 -> 1 halving).  With tp_size = 1 the psums are identity and
     this is exactly the replicated path — one code path for the family.
     ``a_raw`` is a partial sum on the fused path (no fused-path caller
     consumes it: fal/falplus block 0 always assemble).
+
+    With ``plan.sequence_parallel`` the same fork runs in the Megatron-SP
+    layout (``_block_apply_sp``): x arrives sharded (B, S/tp, D) along the
+    sequence over the model axis and every all-reduce above becomes a
+    reduce-scatter (1/tp the bytes) behind an all-gather of the LN region.
     """
+    plan = ExecutionPlan.resolve(plan)
+    if plan.sequence_parallel and plan.tp_axis is not None \
+            and plan.full_sequence:
+        if "xattn" in p or not causal:
+            # cross-attention consumes the assembled attention and the
+            # encoder stacks are bidirectional — neither has an SP layout;
+            # refuse rather than silently fuse/skip them
+            raise NotImplementedError(
+                "sequence-parallel blocks support causal self-attention "
+                "only (no cross-attention / bidirectional encoders)")
+        return _block_apply_sp(p, cfg, x, a1_sig, positions, window,
+                               kind=kind, is_block0=is_block0, plan=plan)
+
     h = L.norm_apply(p["ln1"], x, cfg.norm)
     new_cache = None
-    if mode == "paged":
+    if plan.phase is Phase.PAGED:
         if cfg.use_mla:
             a, new_cache = A.mla_paged_apply(p["attn"], cfg, h, cache,
                                              block_tables, pos, n_valid)
@@ -105,7 +123,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
             a, new_cache = A.gqa_paged_apply(p["attn"], cfg, h, cache,
                                              block_tables, pos, n_valid,
                                              window=window)
-    elif mode == "decode":
+    elif plan.phase is Phase.DECODE:
         if cfg.use_mla:
             a, new_cache = A.mla_decode(p["attn"], cfg, h, cache, pos)
         else:
@@ -113,12 +131,11 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
                                         window=window)
     else:
         if cfg.use_mla:
-            a = A.mla_apply(p["attn"], cfg, h, positions,
-                            pctx=parallel_ctx)
+            a = A.mla_apply(p["attn"], cfg, h, positions, plan=plan)
         else:
             a = A.gqa_apply(p["attn"], cfg, h, positions, window=window,
-                            causal=causal, pctx=parallel_ctx)
-    axis = _tp_axis(parallel_ctx)
+                            causal=causal, plan=plan)
+    axis = plan.tp_axis
     # post-norms and cross-attention normalise/consume the true ``a`` —
     # nonlinear in the partial, so they force the assembled path
     fused = (axis is not None and not cfg.post_norms and "xattn" not in p
@@ -131,7 +148,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
             mlp_in = fal.block0_mlp_input(cfg, p, x, a)
         else:
             mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
-        y, aux = _ffn_apply(p, cfg, mlp_in, kind, parallel_ctx, mode)
+        y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
         return x + _assemble(a + y, axis), a, aux, new_cache
 
     a = _assemble(a, axis)
@@ -153,11 +170,100 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
     else:
         mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
 
-    y, aux = _ffn_apply(p, cfg, mlp_in, kind, parallel_ctx, mode)
+    y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
     y = _assemble(y, axis)
     if cfg.post_norms:
         y = L.norm_apply(p["post_ffn"], y, cfg.norm)
     return resid + y, a, aux, new_cache
+
+
+def _block_apply_sp(p, cfg, x_s, a1_sig, positions, window, *, kind,
+                    is_block0, plan: ExecutionPlan):
+    """Sequence-parallel (Megatron-SP) block inside the explicit-TP
+    shard_map: ``x_s`` is the (B, S/tp, D) sequence shard of the residual
+    stream; the output shard stays (B, S/tp, D).
+
+    Collective structure per block (reduce ops map 1:1 onto the replicated
+    path's all-reduces, at 1/tp the output bytes):
+
+      fused (fal/parallel steady state):
+          all-gather(x_s) -> attention + MLP partials over the full
+          sequence -> ONE reduce-scatter(a + y) back to the shard.
+      assembled (preln/falplus/ablations, post-norms):
+          all-gather(x_s) -> attention partial -> reduce-scatter(a) ->
+          sharded LN region forms mlp_input on the shard ->
+          all-gather(mlp_input) -> MLP partial -> reduce-scatter(y).
+      block 0 with a first-attention export (fal/falplus):
+          the attention partial pays a true all-reduce instead of the
+          reduce-scatter — the signal feeds EVERY later block at EVERY
+          position, so it is the one tensor that must stay fully
+          assembled and replicated (the paper's single extra collective,
+          still paid exactly once for the whole depth).
+
+    LayerNorms run per-token, so ln1/ln2/post-norms apply to sharded or
+    gathered tensors interchangeably; the MLP/MoE kernels need the full
+    sequence because their hidden/expert shards partial-sum over devices
+    spanning ALL tokens.  MoE routing sees the identical gathered input on
+    every device, so ``moe_apply_partial`` composes unchanged and the
+    reduce-scatter completes the expert combine.
+    """
+    axis = plan.tp_axis
+    shard = x_s.shape[1]
+
+    def gather(v):
+        return jax.lax.all_gather(v, axis, axis=1, tiled=True)
+
+    def scatter(v):
+        return jax.lax.psum_scatter(v, axis, scatter_dimension=1, tiled=True)
+
+    def local_slice(full):
+        i = jax.lax.axis_index(axis)
+        return jax.lax.dynamic_slice_in_dim(full, i * shard, shard, axis=1)
+
+    x = gather(x_s)                                    # (B, S, D)
+    h = L.norm_apply(p["ln1"], x, cfg.norm)
+    if cfg.use_mla:
+        a = A.mla_apply(p["attn"], cfg, h, positions, plan=plan)
+    else:
+        a = A.gqa_apply(p["attn"], cfg, h, positions, window=window,
+                        plan=plan)
+
+    fused = not (cfg.post_norms
+                 or fal.attention_must_assemble(cfg.connection, is_block0))
+    if fused:
+        if is_block0:
+            mlp_in = fal.block0_mlp_input(cfg, p, x, a)
+        else:
+            mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
+        y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
+        return x_s + scatter(a + y), a, aux, None
+
+    full_export = is_block0 and cfg.connection in fal.USES_FIRST_ATTENTION
+    if full_export:
+        # block 0's signal export: fully assemble (and post-norm) the
+        # attention so every device holds the replicated a1_raw
+        a = _assemble(a, axis)
+        if cfg.post_norms:
+            a = L.norm_apply(p["post_attn"], a, cfg.norm)
+        resid_s = x_s + local_slice(a)
+        mlp_in = fal.block0_mlp_input(cfg, p, x, a)
+    else:
+        a_s = scatter(a)                               # complete, sharded
+        if cfg.post_norms:
+            a_s = L.norm_apply(p["post_attn"], a_s, cfg.norm)
+        resid_s = x_s + a_s
+        sig_s = local_slice(a1_sig) if a1_sig is not None else None
+        if is_block0:
+            mlp_in_s = fal.block0_mlp_input(cfg, p, x_s, a_s)
+        else:
+            mlp_in_s = fal.mlp_input(cfg, p, x_s, a_s, sig_s)
+        mlp_in = gather(mlp_in_s)                      # LN region -> full
+
+    y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
+    y_s = scatter(y)
+    if cfg.post_norms:
+        y_s = L.norm_apply(p["post_ffn"], y_s, cfg.norm)
+    return resid_s + y_s, a, aux, None
 
 
 def window_schedule(cfg, n_layers=None):

@@ -1,25 +1,37 @@
 """Top-level models: DecoderLM (dense/moe/vlm), MambaLM (ssm), ZambaLM
 (hybrid), Whisper (audio enc-dec).
 
-Uniform functional API:
-    init_params(key, cfg)                       -> params
-    forward(params, cfg, batch, mode, ...)      -> (logits, aux) | (logits, cache)
-    loss_fn(params, cfg, batch, parallel_ctx)   -> (loss, metrics)
-    init_cache(cfg, batch, seq, dtype)          -> decode cache pytree
+Uniform functional API, driven by a typed ``ExecutionPlan``
+(``core/plan.py`` — phase, TP style, sequence parallelism, mesh/axes):
+
+    init_params(key, cfg)                     -> params
+    forward(params, cfg, batch, plan)         -> (logits, aux_loss, extras)
+    loss_fn(params, cfg, batch, plan)         -> (loss, metrics)
+    init_cache(cfg, batch, seq, dtype)        -> decode cache pytree
+    decode_step / paged_decode_step(..., plan)
+
+``plan`` accepts an ExecutionPlan, a Phase (or its string value, e.g.
+"train"), None (single device), or — for one release — a legacy
+parallel-ctx dict via the ``ExecutionPlan.from_legacy_dict`` shim.
 
 Layer stacks run under ``jax.lax.scan`` over stacked params (bounded HLO for
 61-layer models); blocks are ``jax.checkpoint``-ed when cfg.remat.  The FAL
 first-attention signal is produced by the unscanned block 0 and closed over
 by the scan body (a scan-carried constant — zero recompute, DESIGN.md §7).
 
-Tensor parallelism: with ``parallel_ctx = {"mesh", "data_axes",
-"model_axis"}`` the forward runs under implicit GSPMD sharding; adding
-``"tp": "explicit"`` routes the decoder family through
-``decoder_stack_tp`` — ONE shard_map over the whole block stack in which
-attention/FFN kernels see their weight shards and return partial sums, and
-``blocks.block_apply`` realises the paper's per-block collective structure
-(fal/parallel: one fused all-reduce; preln/falplus: two; block 0 pays the
-single extra assemble for the first-attention export).
+Tensor parallelism: ``ExecutionPlan.from_mesh(mesh)`` (tp='gspmd') runs the
+forward under implicit GSPMD sharding; ``tp='explicit'`` routes the decoder
+family through ``decoder_stack_tp`` — ONE shard_map over the whole block
+stack in which attention/FFN kernels see their weight shards and return
+partial sums, and ``blocks.block_apply`` realises the paper's per-block
+collective structure (fal/parallel: one fused all-reduce; preln/falplus:
+two; block 0 pays the single extra assemble for the first-attention
+export).  ``sp=True`` additionally keeps inter-block activations sharded
+over the model axis along the sequence (Megatron-SP LN regions): every
+per-block all-reduce becomes a reduce-scatter at 1/tp the bytes, paired
+with an all-gather around the LN regions — same reduce-collective count,
+and block 0 still pays the one true all-reduce that exports the
+first-attention signal.
 """
 from __future__ import annotations
 
@@ -31,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fal
+from repro.core.plan import ExecutionPlan, Phase
+from repro.core.plan import EXPLICIT_TP_FAMILIES  # noqa: F401 (re-export)
 from repro.models import attention as A
 from repro.models import blocks as BL
 from repro.models import layers as L
@@ -104,15 +118,14 @@ def _decoder_init(key, cfg):
     return p
 
 
-def constrain_batch(x, parallel_ctx):
+def constrain_batch(x, plan: Optional[ExecutionPlan]):
     """Pin activations to batch-over-data sharding (GSPMD anchor after the
     vocab-sharded embedding gather)."""
-    if not parallel_ctx or parallel_ctx.get("mesh") is None:
+    if plan is None or plan.mesh is None:
         return x
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = parallel_ctx["mesh"]
-    spec = P(parallel_ctx["data_axes"], *([None] * (x.ndim - 1)))
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    spec = P(tuple(plan.data_axes) or None, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))
 
 
 def _embed_tokens(p, cfg, tokens, positions, image_embeds=None):
@@ -134,79 +147,48 @@ def _logits(p, cfg, x):
     return L.softcap(L.dense_apply(p["head"], x), cfg.final_softcap)
 
 
-EXPLICIT_TP_FAMILIES = ("dense", "moe", "vlm")
-
-
-def require_explicit_tp(cfg):
-    """Entry-point guard: fail loudly when a config's family has no
-    explicit-TP stack — other families would silently run implicit GSPMD
-    and mislabel any numbers collected under the flag."""
-    if cfg.family not in EXPLICIT_TP_FAMILIES:
-        raise ValueError(f"--tp explicit: family '{cfg.family}' has no "
-                         f"explicit-TP stack (decoder family only: "
-                         f"{EXPLICIT_TP_FAMILIES})")
-
-
-def use_explicit_tp(parallel_ctx) -> bool:
-    """True when the caller asked for the explicit partial-sum TP path
-    (shard_map over the block stack) instead of implicit GSPMD."""
-    return bool(parallel_ctx) and parallel_ctx.get("tp") == "explicit" \
-        and parallel_ctx.get("mesh") is not None
-
-
-def _check_tp_shapes(cfg, tp_size):
-    """Explicit TP shards heads/hidden/experts evenly — fail loudly when the
-    config doesn't divide (GSPMD pads; shard_map in_specs cannot)."""
-    def div(n, what):
-        if n % tp_size:
-            raise ValueError(f"explicit TP: {what}={n} is not divisible by "
-                             f"tp_size={tp_size}")
-    div(cfg.n_heads, "n_heads")
-    if not cfg.use_mla and cfg.n_kv_heads % tp_size \
-            and tp_size % cfg.n_kv_heads:
-        # n_kv_heads < tp_size is fine when groups align (KV replication,
-        # attention._kv_group_slice); anything else cannot shard evenly
-        raise ValueError(f"explicit TP: n_kv_heads={cfg.n_kv_heads} divides "
-                         f"neither way with tp_size={tp_size}")
-    div(cfg.dense_d_ff or cfg.d_ff, "d_ff")
-    if cfg.n_experts:
-        div(cfg.n_experts, "n_experts")
-        if cfg.n_shared_experts:
-            div(cfg.moe_d_ff * cfg.n_shared_experts, "shared-expert d_ff")
-
-
-def decoder_stack_tp(p, cfg, x, positions, parallel_ctx, mode="train"):
+def decoder_stack_tp(p, cfg, x, positions, plan: ExecutionPlan):
     """Block 0 + the scanned segments under ONE shard_map with explicit
     Megatron-style partial sums — the paper's Fig 2 on the real model.
 
     Weights enter through ``launch.mesh.param_specs`` (attention heads + FFN
     hidden column/row over the model axis, MoE experts over the model axis);
-    activations are replicated over ``model`` and sharded over the data
-    axes.  Inside, blocks see ``parallel_ctx["tp_axis"]`` and compose the
-    partial sums per ``core.fal.attention_must_assemble`` — fal/parallel pay
-    one collective per steady-state block, preln/falplus two, and the
-    unscanned block 0 pays the one extra assemble that exports the
-    first-attention signal.  Returns (x, aux)."""
+    activations are sharded over the data axes and — replicated over
+    ``model`` by default, or sharded over ``model`` along the SEQUENCE when
+    ``plan.sequence_parallel`` (Megatron-SP: the residual stream between
+    blocks is (B, S/tp, D) per device).  Inside, blocks see ``plan.inner()``
+    (``plan.tp_axis`` set) and compose the partial sums per
+    ``core.fal.attention_must_assemble`` — fal/parallel pay one reduce
+    collective per steady-state block, preln/falplus two, and the unscanned
+    block 0 pays the one extra assemble that exports the first-attention
+    signal; under SP each all-reduce becomes a reduce-scatter at 1/tp the
+    bytes behind an all-gather of the LN region.  Returns (x, aux)."""
     from jax.sharding import PartitionSpec as P
     from repro.core.compat import shard_map
     from repro.launch import mesh as MX
 
-    mesh = parallel_ctx["mesh"]
-    dax = tuple(parallel_ctx["data_axes"])
-    max_ = parallel_ctx["model_axis"]
-    tp_size = mesh.shape[max_]
-    _check_tp_shapes(cfg, tp_size)
+    plan.validate(cfg)
+    mesh = plan.mesh
+    dax = tuple(plan.data_axes)
+    max_ = plan.model_axis
+    tp_size = plan.tp_size
+    sp = plan.sequence_parallel
+    if sp and x.shape[1] % tp_size:
+        raise ValueError(
+            f"sequence_parallel: seq len {x.shape[1]} is not divisible by "
+            f"tp_size={tp_size} (the residual stream shards evenly or not "
+            f"at all)")
     blocks = {k: p[k] for k in ("block0", "blocks_dense", "blocks_moe")
               if p.get(k) is not None}
     kv_rep = (not cfg.use_mla) and cfg.n_kv_heads % tp_size != 0
     wspecs = MX.param_specs(blocks, cfg,
                             kv_replicated=kv_rep)  # Megatron, model axis only
-    inner = {"mesh": None, "tp_axis": max_, "tp_size": tp_size,
-             "data_axes": dax, "model_axis": max_}
+    inner = plan.inner()
     b_ax = dax if dax else None
+    s_ax = max_ if sp else None
 
     def local(bp, x, positions):
-        x, aux = _run_decoder_blocks(bp, cfg, x, positions, inner, mode)
+        x, aux = _run_decoder_blocks(bp, cfg, x, positions, inner)
         if dax:
             # MoE aux differs per data shard (local routing); make it the
             # global mean so the out_spec can declare it replicated
@@ -214,17 +196,17 @@ def decoder_stack_tp(p, cfg, x, positions, parallel_ctx, mode="train"):
         return x, aux
 
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(wspecs, P(b_ax, None, None), P(b_ax, None)),
-                   out_specs=(P(b_ax, None, None), P()),
+                   in_specs=(wspecs, P(b_ax, s_ax, None), P(b_ax, None)),
+                   out_specs=(P(b_ax, s_ax, None), P()),
                    check_vma=False)
     return fn(blocks, x, positions)
 
 
-def _run_decoder_blocks(p, cfg, x, positions, parallel_ctx, mode):
+def _run_decoder_blocks(p, cfg, x, positions, plan: ExecutionPlan):
     """Block 0 + the scanned dense/moe segments.  ONE implementation shared
     by the replicated/GSPMD path and the explicit-TP shard_map local body —
-    the collective structure differs only through the parallel_ctx the
-    blocks see.  Returns (x, aux).
+    the collective structure differs only through the plan the blocks see.
+    Returns (x, aux).
 
     Block 0 sits outside the layer scan; without its own remat its
     attention residuals (probs etc.) are stashed for backward
@@ -233,7 +215,7 @@ def _run_decoder_blocks(p, cfg, x, positions, parallel_ctx, mode):
     block0 = _maybe_remat(
         lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, wsched[0],
                                      kind=_layer_kind(cfg, 0), is_block0=True,
-                                     parallel_ctx=parallel_ctx, mode=mode),
+                                     plan=plan),
         cfg)
     x, a1_raw, aux, _ = block0(p["block0"], x)
     a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
@@ -244,21 +226,20 @@ def _run_decoder_blocks(p, cfg, x, positions, parallel_ctx, mode):
             n = jax.tree.leaves(p[name])[0].shape[0]
             ws = jnp.asarray(wsched[i:i + n], jnp.int32)
             x, aux_s = _run_stack(p[name], cfg, x, a1_sig, positions, ws,
-                                  kind, parallel_ctx, mode)
+                                  kind, plan)
             aux += aux_s
             i += n
     return x, aux
 
 
 def _run_stack(p_stack, cfg, x, a1_sig, positions, windows, kind,
-               parallel_ctx, mode):
+               plan: ExecutionPlan):
     """Scan blocks over stacked params.  Returns (x, aux_sum)."""
     def body(carry, xs):
         h, aux = carry
         pb, w = xs
         h, _, aux_i, _ = BL.block_apply(
-            pb, cfg, h, a1_sig, positions, w, kind=kind,
-            parallel_ctx=parallel_ctx, mode=mode)
+            pb, cfg, h, a1_sig, positions, w, kind=kind, plan=plan)
         return (h, aux + aux_i), None
 
     body = _maybe_remat(body, cfg)
@@ -267,20 +248,18 @@ def _run_stack(p_stack, cfg, x, a1_sig, positions, windows, kind,
     return x, aux
 
 
-def _decoder_forward(p, cfg, batch, mode, parallel_ctx=None,
-                     want="logits"):
+def _decoder_forward(p, cfg, batch, plan: ExecutionPlan, want="logits"):
     tokens = batch["tokens"]
     B, Sq = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
     x = _embed_tokens(p, cfg, tokens, positions,
                       batch.get("image_embeds"))
-    x = constrain_batch(x, parallel_ctx)
+    x = constrain_batch(x, plan)
 
-    if use_explicit_tp(parallel_ctx):
-        x, aux = decoder_stack_tp(p, cfg, x, positions, parallel_ctx, mode)
+    if plan.use_explicit_tp:
+        x, aux = decoder_stack_tp(p, cfg, x, positions, plan)
     else:
-        x, aux = _run_decoder_blocks(p, cfg, x, positions, parallel_ctx,
-                                     mode)
+        x, aux = _run_decoder_blocks(p, cfg, x, positions, plan)
 
     if want == "hidden":
         return None, aux, {"hidden": x}
@@ -299,8 +278,9 @@ def _decoder_init_cache(p, cfg, batch, seq, dtype):
     return {"block0": c0, "blocks": stacked}
 
 
-def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache, mode,
-                         parallel_ctx, block_tables=None, n_valid=None):
+def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
+                         plan: ExecutionPlan, block_tables=None,
+                         n_valid=None):
     """Scan the stacked post-block0 layers in dense/moe segments over
     per-layer caches (dense+moe kinds share attention caches; the ffn kind
     switch is static per segment).  Returns (x, new_stacked_cache).
@@ -328,9 +308,9 @@ def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache, mode,
                 else:
                     pb, w, ci = xs
                 h, _, _, c_new = BL.block_apply(
-                    pb, cfg, h, a1_sig, None, w, kind=kind, mode=mode,
+                    pb, cfg, h, a1_sig, None, w, kind=kind, plan=plan,
                     cache=ci, pos=pos, block_tables=block_tables,
-                    n_valid=n_valid, parallel_ctx=parallel_ctx)
+                    n_valid=n_valid)
                 return h, c_new
 
             xs = (p[name], cache_seg) if static_zero else \
@@ -341,7 +321,7 @@ def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache, mode,
     return x, jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *seg_caches)
 
 
-def _decoder_decode(p, cfg, batch, cache, parallel_ctx=None):
+def _decoder_decode(p, cfg, batch, cache, plan: ExecutionPlan):
     tokens, pos = batch["tokens"], batch["pos"]
     positions = pos[:, None]
     x = _embed_tokens(p, cfg, tokens, positions)
@@ -354,13 +334,12 @@ def _decoder_decode(p, cfg, batch, cache, parallel_ctx=None):
 
     x, a1_raw, _, c0 = BL.block_apply(
         p["block0"], cfg, x, None, positions, wsched[0],
-        kind=_layer_kind(cfg, 0), is_block0=True, mode="decode",
-        cache=cache["block0"], pos=pos, parallel_ctx=parallel_ctx)
+        kind=_layer_kind(cfg, 0), is_block0=True, plan=plan,
+        cache=cache["block0"], pos=pos)
     a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
 
     x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
-                                         cache["blocks"], "decode",
-                                         parallel_ctx)
+                                         cache["blocks"], plan)
     logits = _logits(p, cfg, x)
     return logits, {"block0": c0, "blocks": blocks_new}
 
@@ -384,7 +363,7 @@ def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype):
     }
 
 
-def _decoder_paged_decode(p, cfg, batch, cache, parallel_ctx=None):
+def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan):
     """Chunked paged tick: C >= 1 tokens per request against page pools.
 
     batch: tokens (B, C), pos (B,) first logical position, n_valid (B,)
@@ -402,20 +381,18 @@ def _decoder_paged_decode(p, cfg, batch, cache, parallel_ctx=None):
         # (same contract as _decoder_decode, lane-wise over the chunk)
         x = jnp.where((positions < cfg.n_image_tokens)[:, :, None],
                       batch["image_embeds"].astype(x.dtype), x)
-    x = constrain_batch(x, parallel_ctx)
+    x = constrain_batch(x, plan)
     wsched = BL.window_schedule(cfg)
 
     x, a1_raw, _, c0 = BL.block_apply(
         p["block0"], cfg, x, None, positions, wsched[0],
-        kind=_layer_kind(cfg, 0), is_block0=True, mode="paged",
-        cache=cache["block0"], pos=pos, block_tables=bt, n_valid=n_valid,
-        parallel_ctx=parallel_ctx)
+        kind=_layer_kind(cfg, 0), is_block0=True, plan=plan,
+        cache=cache["block0"], pos=pos, block_tables=bt, n_valid=n_valid)
     a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
 
     x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
-                                         cache["blocks"], "paged",
-                                         parallel_ctx, block_tables=bt,
-                                         n_valid=n_valid)
+                                         cache["blocks"], plan,
+                                         block_tables=bt, n_valid=n_valid)
     new_caches = {"block0": c0, "blocks": blocks_new}
 
     # stash the per-request FAL export at each request's last valid position;
@@ -445,19 +422,18 @@ def _mamba_init(key, cfg):
     }
 
 
-def _mamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
+def _mamba_forward(p, cfg, batch, plan: ExecutionPlan, want="logits"):
     x = L.embed_apply(p["embed"], batch["tokens"], cfg.dtype)
-    x = constrain_batch(x, parallel_ctx)
+    x = constrain_batch(x, plan)
 
     def body(h, pb):
         # pin the mixer input/output to batch-over-data sharding: without
         # the anchor GSPMD auto-spreads the SSD einsums over the idle
         # `model` axis and pays reshard collectives every layer
         # (EXPERIMENTS.md §Perf M1)
-        h_in = constrain_batch(L.norm_apply(pb["ln"], h, cfg.norm),
-                               parallel_ctx)
+        h_in = constrain_batch(L.norm_apply(pb["ln"], h, cfg.norm), plan)
         y, _ = S.mamba_apply(pb["mixer"], cfg, h_in)
-        y = constrain_batch(y, parallel_ctx)
+        y = constrain_batch(y, plan)
         return h + y, None
 
     body = _maybe_remat(body, cfg)
@@ -473,7 +449,7 @@ def _mamba_init_cache(cfg, batch, seq, dtype):
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), c0)}
 
 
-def _mamba_decode(p, cfg, batch, cache, parallel_ctx=None):
+def _mamba_decode(p, cfg, batch, cache, plan: ExecutionPlan = None):
     x = L.embed_apply(p["embed"], batch["tokens"], cfg.dtype)
 
     def body(h, xs):
@@ -522,7 +498,7 @@ def _zamba_init(key, cfg):
 
 
 def _zamba_shared_block(p, cfg, x, x0, in_proj, a1_sig, positions, *,
-                        first, mode="train", cache=None, pos=None):
+                        first, plan=None, cache=None, pos=None):
     """One invocation of the weight-shared attention block (FAL-aware)."""
     h_in = jnp.concatenate([x, x0], axis=-1) @ in_proj.astype(x.dtype)
     shared = dict(p["shared"])
@@ -530,13 +506,13 @@ def _zamba_shared_block(p, cfg, x, x0, in_proj, a1_sig, positions, *,
         shared["ln_fal"] = p["shared_ln_fal"]
     out, a_raw, _, c_new = BL.block_apply(
         shared, cfg, h_in, a1_sig, positions, 0, kind="dense",
-        is_block0=first, mode=mode, cache=cache, pos=pos)
+        is_block0=first, plan=plan, cache=cache, pos=pos)
     # block returns h_in + attn + mlp; zamba adds only the delta to the
     # backbone residual stream
     return x + (out - h_in), a_raw, c_new
 
 
-def _zamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
+def _zamba_forward(p, cfg, batch, plan: ExecutionPlan, want="logits"):
     tokens = batch["tokens"]
     B, Sq = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
@@ -548,9 +524,9 @@ def _zamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
         def body(hh, pb):
             # same activation pin as MambaLM (EXPERIMENTS.md §Perf M1)
             h_in = constrain_batch(L.norm_apply(pb["ln"], hh, cfg.norm),
-                                   parallel_ctx)
+                                   plan)
             y, _ = S.mamba_apply(pb["mixer"], cfg, h_in)
-            return hh + constrain_batch(y, parallel_ctx), None
+            return hh + constrain_batch(y, plan), None
         h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, pstack)
         return h
 
@@ -560,7 +536,7 @@ def _zamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
         x = mamba_seg(x, jax.tree.map(lambda a: a[0], p["mamba"]))
         return _zamba_shared_block(
             p, cfg, x, x0, p["in_proj"][0], None, positions, first=True,
-            mode=mode)
+            plan=plan)
     x, a1_raw, _ = _maybe_remat(group0, cfg)(p, x)
     a1_sig = fal.first_attention_signal(cfg, p["shared"], a1_raw)
 
@@ -568,7 +544,7 @@ def _zamba_forward(p, cfg, batch, mode, parallel_ctx=None, want="logits"):
         pst, iproj = xs
         h = mamba_seg(h, pst)
         h, _, _ = _zamba_shared_block(p, cfg, h, x0, iproj, a1_sig,
-                                      positions, first=False, mode=mode)
+                                      positions, first=False, plan=plan)
         return h, None
 
     if n_groups > 1:
@@ -595,7 +571,7 @@ def _zamba_init_cache(cfg, batch, seq, dtype):
     return cache
 
 
-def _zamba_decode(p, cfg, batch, cache, parallel_ctx=None):
+def _zamba_decode(p, cfg, batch, cache, plan: ExecutionPlan):
     tokens, pos = batch["tokens"], batch["pos"]
     x0 = L.embed_apply(p["embed"], tokens, cfg.dtype)
     x = x0
@@ -613,7 +589,7 @@ def _zamba_decode(p, cfg, batch, cache, parallel_ctx=None):
                        jax.tree.map(lambda a: a[0], cache["mamba"]))
     x, a1_raw, ac0 = _zamba_shared_block(
         p, cfg, x, x0, p["in_proj"][0], None, None, first=True,
-        mode="decode", cache=jax.tree.map(lambda a: a[0], cache["attn"]),
+        plan=plan, cache=jax.tree.map(lambda a: a[0], cache["attn"]),
         pos=pos)
     a1_sig = fal.first_attention_signal(cfg, p["shared"], a1_raw)
 
@@ -621,7 +597,7 @@ def _zamba_decode(p, cfg, batch, cache, parallel_ctx=None):
         pst, iproj, mci, aci = xs
         h, mc_new = mamba_seg(h, pst, mci)
         h, _, ac_new = _zamba_shared_block(
-            p, cfg, h, x0, iproj, a1_sig, None, first=False, mode="decode",
+            p, cfg, h, x0, iproj, a1_sig, None, first=False, plan=plan,
             cache=aci, pos=pos)
         return h, (mc_new, ac_new)
 
@@ -672,30 +648,30 @@ def _whisper_init(key, cfg):
     return p
 
 
-def whisper_encode(p, cfg, frames):
+def whisper_encode(p, cfg, frames, plan: ExecutionPlan = None):
     """frames: (B, F, d) stubbed frame embeddings."""
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PREFILL)
     x = frames.astype(jnp.dtype(cfg.dtype)) + p["enc_pos"].astype(
         jnp.dtype(cfg.dtype))[None, :frames.shape[1]]
     # encoder self-attention is bidirectional (causal=False), no rope
     enc0 = _maybe_remat(
         lambda pb, h: BL.block_apply(pb, cfg, h, None, None, 0,
-                                     is_block0=True, mode="prefill",
+                                     is_block0=True, plan=plan,
                                      causal=False), cfg)
     x, a1_raw, _, _ = enc0(p["enc_block0"], x)
     a1_sig = fal.first_attention_signal(cfg, p["enc_block0"], a1_raw)
 
     def body(h, pb):
         h, _, _, _ = BL.block_apply(pb, cfg, h, a1_sig, None, 0,
-                                    mode="prefill", causal=False)
+                                    plan=plan, causal=False)
         return h, None
 
     x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["enc_blocks"])
     return L.norm_apply(p["enc_norm"], x, cfg.norm)
 
 
-def _whisper_forward(p, cfg, batch, mode, parallel_ctx=None,
-                     want="logits"):
-    enc_out = whisper_encode(p, cfg, batch["frames"])
+def _whisper_forward(p, cfg, batch, plan: ExecutionPlan, want="logits"):
+    enc_out = whisper_encode(p, cfg, batch["frames"], plan)
     tokens = batch["tokens"]
     B, Sq = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
@@ -704,14 +680,14 @@ def _whisper_forward(p, cfg, batch, mode, parallel_ctx=None,
 
     dec0 = _maybe_remat(
         lambda pb, h: BL.block_apply(pb, cfg, h, None, positions, 0,
-                                     is_block0=True, mode=mode,
+                                     is_block0=True, plan=plan,
                                      enc_out=enc_out), cfg)
     x, a1_raw, _, _ = dec0(p["dec_block0"], x)
     a1_sig = fal.first_attention_signal(cfg, p["dec_block0"], a1_raw)
 
     def body(h, pb):
         h, _, _, _ = BL.block_apply(pb, cfg, h, a1_sig, positions, 0,
-                                    mode=mode, enc_out=enc_out)
+                                    plan=plan, enc_out=enc_out)
         return h, None
 
     x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["dec_blocks"])
@@ -732,7 +708,7 @@ def _whisper_init_cache(cfg, batch, seq, dtype):
     }
 
 
-def _whisper_decode(p, cfg, batch, cache, parallel_ctx=None):
+def _whisper_decode(p, cfg, batch, cache, plan: ExecutionPlan):
     tokens, pos = batch["tokens"], batch["pos"]
     enc_out = cache["enc_out"].astype(jnp.dtype(cfg.dtype))
     x = L.embed_apply(p["embed"], tokens, cfg.dtype) \
@@ -740,13 +716,13 @@ def _whisper_decode(p, cfg, batch, cache, parallel_ctx=None):
 
     x, a1_raw, _, c0 = BL.block_apply(
         p["dec_block0"], cfg, x, None, None, 0, is_block0=True,
-        mode="decode", enc_out=enc_out, cache=cache["block0"], pos=pos)
+        plan=plan, enc_out=enc_out, cache=cache["block0"], pos=pos)
     a1_sig = fal.first_attention_signal(cfg, p["dec_block0"], a1_raw)
 
     def body(h, xs):
         pb, ci = xs
         h, _, _, c_new = BL.block_apply(pb, cfg, h, a1_sig, None, 0,
-                                        mode="decode", enc_out=enc_out,
+                                        plan=plan, enc_out=enc_out,
                                         cache=ci, pos=pos)
         return h, c_new
 
@@ -768,12 +744,22 @@ def init_params(key, cfg):
     return _decoder_init(key, cfg)
 
 
-def forward(params, cfg, batch, mode="train", parallel_ctx=None,
-            want="logits"):
-    """train/prefill: -> (logits, aux_loss, extras)."""
+def forward(params, cfg, batch, plan=None, ctx=None, want="logits"):
+    """Full-sequence forward -> (logits, aux_loss, extras).
+
+    ``plan``: ExecutionPlan | Phase | phase string ("train"/"prefill") |
+    legacy parallel-ctx dict (shimmed) | None (single device, train).
+    ``ctx`` is the retired positional parallel-ctx slot — the pre-plan call
+    shape ``forward(params, cfg, batch, "train", {...})`` still resolves
+    through ``ExecutionPlan.from_legacy_dict`` for one release."""
+    plan = ExecutionPlan.resolve(plan, ctx).validate(cfg)
+    if not plan.full_sequence:
+        raise ValueError(f"forward: phase={plan.phase.value} is not a "
+                         f"full-sequence phase; use decode_step / "
+                         f"paged_decode_step")
     fn = {"ssm": _mamba_forward, "hybrid": _zamba_forward,
           "audio": _whisper_forward}.get(cfg.family, _decoder_forward)
-    return fn(params, cfg, batch, mode, parallel_ctx, want=want)
+    return fn(params, cfg, batch, plan, want=want)
 
 
 def init_cache(cfg, batch, seq, dtype="bfloat16"):
@@ -786,11 +772,12 @@ def init_cache(cfg, batch, seq, dtype="bfloat16"):
     return _decoder_init_cache(None, cfg, batch, seq, dtype)
 
 
-def decode_step(params, cfg, batch, cache, parallel_ctx=None):
+def decode_step(params, cfg, batch, cache, plan=None):
     """-> (logits (B,1,V), new_cache)."""
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE).validate(cfg)
     fn = {"ssm": _mamba_decode, "hybrid": _zamba_decode,
           "audio": _whisper_decode}.get(cfg.family, _decoder_decode)
-    return fn(params, cfg, batch, cache, parallel_ctx)
+    return fn(params, cfg, batch, cache, plan)
 
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
@@ -806,13 +793,14 @@ def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16"):
     return _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype)
 
 
-def paged_decode_step(params, cfg, batch, cache, parallel_ctx=None):
+def paged_decode_step(params, cfg, batch, cache, plan=None):
     """Chunked paged tick -> (logits (B,C,V), new_cache).  See
     ``_decoder_paged_decode`` for the batch contract."""
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"paged decode: decoder family only, got {cfg.family}")
-    return _decoder_paged_decode(params, cfg, batch, cache, parallel_ctx)
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED).validate(cfg)
+    return _decoder_paged_decode(params, cfg, batch, cache, plan)
 
 
 def _mtp_loss(p, cfg, batch, hidden):
@@ -827,8 +815,7 @@ def _mtp_loss(p, cfg, batch, hidden):
     B, S1 = z.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(S1)[None], (B, S1))
     z, _, _, _ = BL.block_apply(mtp["block"], cfg.replace(connection="preln"),
-                                z, None, positions, 0, kind="dense",
-                                mode="train")
+                                z, None, positions, 0, kind="dense")
     logits = _logits(p, cfg, z)                      # (B, S-1, V)
     return cross_entropy(logits[:, :-1], tokens[:, 2:])
 
@@ -838,12 +825,12 @@ def _ce_tail(p, cfg, hidden, tokens):
     return cross_entropy(logits[:, :-1], tokens[:, 1:])
 
 
-def loss_fn(params, cfg, batch, parallel_ctx=None):
+def loss_fn(params, cfg, batch, plan=None):
     # compute CE from the final hidden state under remat: the (B,S,V)
     # logits (+ their fp32 softmax copies) are recomputed in backward
     # instead of stashed (EXPERIMENTS.md §Perf D2)
-    _, aux, extras = forward(params, cfg, batch, "train", parallel_ctx,
-                             want="hidden")
+    plan = ExecutionPlan.resolve(plan)
+    _, aux, extras = forward(params, cfg, batch, plan, want="hidden")
     tokens = batch["tokens"]
     tail = jax.checkpoint(functools.partial(_ce_tail, cfg=cfg)) \
         if cfg.remat else functools.partial(_ce_tail, cfg=cfg)

@@ -167,11 +167,13 @@ def moe_apply_partial(p, cfg, x, axis="model"):
 # ------------------------------------------------------------------------- #
 # shard_map expert-parallel path (training)
 # ------------------------------------------------------------------------- #
-def moe_apply_sharded(p, cfg, x, mesh, data_axes, model_axis):
-    """Expert parallelism: experts sharded over ``model_axis``; tokens
+def moe_apply_sharded(p, cfg, x, plan):
+    """Expert parallelism: experts sharded over ``plan.model_axis``; tokens
     all-to-all'd to expert owners and back.  x: (B, S, d) global."""
     from jax.sharding import PartitionSpec as P
 
+    mesh = plan.mesh
+    data_axes, model_axis = tuple(plan.data_axes), plan.model_axis
     M = mesh.shape[model_axis]
     E = cfg.n_experts
     assert E % M == 0, (E, M)
@@ -222,7 +224,7 @@ def moe_apply_sharded(p, cfg, x, mesh, data_axes, model_axis):
 # ------------------------------------------------------------------------- #
 # shard-slot dispatch (beyond-paper, EXPERIMENTS.md §Perf D3)
 # ------------------------------------------------------------------------- #
-def moe_apply_shard_slot(p, cfg, x, mesh, data_axes, model_axis):
+def moe_apply_shard_slot(p, cfg, x, plan):
     """Expert parallelism with ONE wire crossing per (token, destination
     shard) instead of one per (token, expert).
 
@@ -235,6 +237,8 @@ def moe_apply_shard_slot(p, cfg, x, mesh, data_axes, model_axis):
     """
     from jax.sharding import PartitionSpec as P
 
+    mesh = plan.mesh
+    data_axes, model_axis = tuple(plan.data_axes), plan.model_axis
     M = mesh.shape[model_axis]
     E = cfg.n_experts
     L = cfg.route_group_limit if cfg.route_groups else min(cfg.top_k, M)

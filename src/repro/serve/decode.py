@@ -14,27 +14,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
 
 
-def make_serve_step(cfg, parallel_ctx=None):
+def make_serve_step(cfg, plan=None):
     """serve_step(params, cache, tokens (B,1), pos (B,)) ->
-    (next_token (B,), logits, new_cache)."""
+    (next_token (B,), logits, new_cache).  ``plan``: ExecutionPlan (legacy
+    parallel-ctx dicts are shimmed); the phase is pinned to decode."""
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE)
+    plan.validate(cfg)
 
     def serve_step(params, cache, tokens, pos):
         batch = {"tokens": tokens, "pos": pos}
-        logits, new_cache = M.decode_step(params, cfg, batch, cache,
-                                          parallel_ctx)
+        logits, new_cache = M.decode_step(params, cfg, batch, cache, plan)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return nxt, logits, new_cache
 
     return serve_step
 
 
-def make_prefill_then_decode(cfg, parallel_ctx=None):
+def make_prefill_then_decode(cfg, plan=None):
     """Prefill via repeated decode steps (teacher-forcing the prompt into the
     cache) then greedy decode.  Used by examples/serve_requests.py."""
-    serve_step = jax.jit(make_serve_step(cfg, parallel_ctx))
+    serve_step = jax.jit(make_serve_step(cfg, plan))
 
     def generate(params, prompts: np.ndarray, max_new: int, cache):
         B, P = prompts.shape
@@ -69,12 +72,13 @@ class ContinuousBatcher:
     vector the decode kernels consume."""
 
     def __init__(self, cfg, params, batch_slots: int, max_seq: int,
-                 cache_dtype="float32", parallel_ctx=None):
+                 cache_dtype="float32", plan=None):
         self.cfg, self.params = cfg, params
+        self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE)
         self.B = batch_slots
         self.max_seq = max_seq
         self.cache = M.init_cache(cfg, batch_slots, max_seq, cache_dtype)
-        self.serve_step = jax.jit(make_serve_step(cfg, parallel_ctx))
+        self.serve_step = jax.jit(make_serve_step(cfg, self.plan))
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
 

@@ -18,28 +18,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
 from repro.serve import sampling as SP
 
 
-def make_paged_step(cfg, parallel_ctx=None):
+def make_paged_step(cfg, plan=None):
     """Jitted paged tick: (params, cache, tokens (B,C), pos (B,),
     n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
     sample_pos) -> (logits (B,C,V), next_tokens (B,), new_cache).
 
-    One returned callable serves both phases: call it with C == chunk for
-    prefill ticks and C == 1 for decode ticks (two traces, cached by shape).
-    Sampling is fused into the program (one dispatch per tick) and the cache
-    buffers are donated, so page pools update in place instead of being
-    copied every tick.
+    ``plan``: ExecutionPlan (legacy parallel-ctx dicts are shimmed); the
+    phase is pinned to paged.  One returned callable serves both engine
+    phases: call it with C == chunk for prefill ticks and C == 1 for decode
+    ticks (two traces, cached by shape).  Sampling is fused into the
+    program (one dispatch per tick) and the cache buffers are donated, so
+    page pools update in place instead of being copied every tick.
     """
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
+    plan.validate(cfg)
 
     def step(params, cache, tokens, pos, n_valid, block_tables,
              temps, top_ks, top_ps, seeds, sample_pos):
         batch = {"tokens": tokens, "pos": pos, "n_valid": n_valid,
                  "block_tables": block_tables}
         logits, new_cache = M.paged_decode_step(params, cfg, batch, cache,
-                                                parallel_ctx)
+                                                plan)
         nxt = jax.vmap(SP.sample_one)(
             last_valid_logits(logits, n_valid), temps, top_ks, top_ps,
             seeds, sample_pos)

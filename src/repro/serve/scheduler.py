@@ -28,6 +28,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
 from repro.serve import prefill as PF
 from repro.serve import sampling as SP
@@ -70,7 +71,7 @@ class PagedEngine:
     """Slot-based continuous batching over paged KV (decoder family)."""
 
     def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
-                 parallel_ctx=None):
+                 plan=None):
         if cfg.family not in M.PAGED_FAMILIES:
             raise NotImplementedError(cfg.family)
         if cfg.n_image_tokens:
@@ -82,12 +83,16 @@ class PagedEngine:
                 "need image_embeds plumbed through ServeRequest")
         assert engine_cfg.admission in ("prompt", "full"), engine_cfg.admission
         self.cfg, self.params, self.ecfg = cfg, params, engine_cfg
+        # the engine stores a typed plan, not a context dict; every jitted
+        # dispatch it compiles runs under this plan with phase=paged
+        self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
+        self.plan.validate(cfg)
         self.max_blocks = pages_needed(engine_cfg.max_seq,
                                        engine_cfg.page_size)
         self.cache = M.init_paged_cache(
             cfg, engine_cfg.num_pages, engine_cfg.page_size,
             engine_cfg.slots, engine_cfg.cache_dtype)
-        self.step_fn = PF.make_paged_step(cfg, parallel_ctx)
+        self.step_fn = PF.make_paged_step(cfg, self.plan)
         self.allocator = PageAllocator(engine_cfg.num_pages,
                                        engine_cfg.page_size)
         self.tables = [BlockTable(self.allocator, self.max_blocks)

@@ -1,5 +1,5 @@
 """Train step: loss -> grad (with microbatched gradient accumulation) ->
-AdamW update.  Built once per (cfg, mesh) and jitted by the caller
+AdamW update.  Built once per (cfg, ExecutionPlan) and jitted by the caller
 (launch/train.py, launch/dryrun.py)."""
 from __future__ import annotations
 
@@ -8,34 +8,42 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
 from repro.optim import adamw
 
 
-def make_loss_fn(cfg, parallel_ctx=None):
+def make_loss_fn(cfg, plan=None):
+    plan = ExecutionPlan.resolve(plan)
+
     def loss(params, batch):
-        l, metrics = M.loss_fn(params, cfg, batch, parallel_ctx)
+        l, metrics = M.loss_fn(params, cfg, batch, plan)
         return l, metrics
     return loss
 
 
-def make_train_step(cfg, ocfg: adamw.AdamWConfig, parallel_ctx=None,
+def make_train_step(cfg, ocfg: adamw.AdamWConfig, plan=None,
                     num_microbatches: int = 1, grad_shardings=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     state = {"params", "opt"}.  ``batch["tokens"]``: (B, S); B is split into
     ``num_microbatches`` sequential microbatches (lax.scan) with gradient
     accumulation — bounds activation (and MoE dispatch-buffer) memory.
-    ``parallel_ctx`` flows unchanged into the model: with ``{"tp":
-    "explicit"}`` the decoder family's loss/grad run through the shard_map
-    partial-sum TP stack (model.decoder_stack_tp) — the paper's per-block
-    collective structure — instead of implicit GSPMD sharding; the psums
-    differentiate, so the same step covers both layouts.
+    ``plan`` (ExecutionPlan; legacy parallel-ctx dicts are shimmed) flows
+    unchanged into the model: with ``tp='explicit'`` the decoder family's
+    loss/grad run through the shard_map partial-sum TP stack
+    (model.decoder_stack_tp) — the paper's per-block collective structure —
+    instead of implicit GSPMD sharding, and with ``sp=True`` the
+    inter-block activations additionally stay sequence-sharded over the
+    model axis (reduce-scatter/all-gather LN regions); the collectives
+    differentiate, so the same step covers every layout.
     ``grad_shardings``: NamedSharding tree matching params — pins the
     accumulated-gradient buffer to the param layout (otherwise GSPMD may
     replicate it, which at 671B scale is fatal).
     """
-    loss_fn = make_loss_fn(cfg, parallel_ctx)
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.TRAIN)
+    plan.validate(cfg)
+    loss_fn = make_loss_fn(cfg, plan)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def pin(g):
@@ -80,8 +88,10 @@ def init_state(key, cfg, ocfg: adamw.AdamWConfig):
     return {"params": params, "opt": adamw.init_opt_state(params, ocfg)}
 
 
-def make_eval_step(cfg, parallel_ctx=None):
-    loss_fn = make_loss_fn(cfg, parallel_ctx)
+def make_eval_step(cfg, plan=None):
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.EVAL)
+    plan.validate(cfg)
+    loss_fn = make_loss_fn(cfg, plan)
 
     def eval_step(params, batch):
         l, metrics = loss_fn(params, batch)

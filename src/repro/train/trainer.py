@@ -14,19 +14,20 @@ from repro.train import step as tstep
 
 
 def train(cfg, *, steps=200, batch=8, seq_len=128, lr=3e-4, seed=0,
-          parallel_ctx=None, num_microbatches=1, log_every=20,
+          plan=None, num_microbatches=1, log_every=20,
           eval_every=0, ckpt_dir=None, data=None, schedule="cosine",
           in_shardings=None, callbacks=()):
-    """Returns (state, history)."""
+    """Returns (state, history).  ``plan``: ExecutionPlan (or legacy
+    parallel-ctx dict, shimmed) selecting the mesh/TP/SP layout."""
     sched = {"cosine": schedules.warmup_cosine,
              "onecycle": schedules.one_cycle,
              "wsd": schedules.wsd}[schedule](lr, steps)
     ocfg = adamw.AdamWConfig(lr=sched)
     state = tstep.init_state(jax.random.PRNGKey(seed), cfg, ocfg)
-    step_fn = jax.jit(tstep.make_train_step(cfg, ocfg, parallel_ctx,
+    step_fn = jax.jit(tstep.make_train_step(cfg, ocfg, plan,
                                             num_microbatches),
                       in_shardings=in_shardings, donate_argnums=(0,))
-    eval_fn = jax.jit(tstep.make_eval_step(cfg, parallel_ctx))
+    eval_fn = jax.jit(tstep.make_eval_step(cfg, plan))
     if data is None:
         data = SyntheticMarkov(cfg.vocab, seq_len, batch, seed=seed)
     it = iter(data)

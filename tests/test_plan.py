@@ -1,0 +1,180 @@
+"""ExecutionPlan (core/plan.py): construction, validation errors, the
+legacy parallel-ctx dict shim, and SP-vs-replicated logits equivalence.
+
+Validation unit tests use a lightweight fake mesh (validate only reads
+``axis_names``/``shape``); the equivalence test spawns a subprocess with 2
+forced CPU host devices so the rest of the suite keeps seeing 1 device.
+"""
+import os
+import subprocess
+import sys
+import types
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.plan import ExecutionPlan, Phase, TPStyle
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def fake_mesh(**axes):
+    return types.SimpleNamespace(shape=dict(axes),
+                                 axis_names=tuple(axes))
+
+
+def cfg_for(arch="llama3.2-3b", **kw):
+    return get_config(arch).reduced().replace(**kw)
+
+
+# ------------------------------------------------------------------ build --
+def test_single_device_defaults():
+    p = ExecutionPlan.single_device()
+    assert p.phase is Phase.TRAIN and p.tp is TPStyle.NONE
+    assert p.tp_size == 1 and p.tp_axis is None
+    assert not p.use_explicit_tp and not p.is_sharded
+    p.validate(cfg_for())      # nothing to reject
+
+
+def test_from_mesh_axes_and_styles():
+    mesh = fake_mesh(pod=2, data=4, model=8)
+    p = ExecutionPlan.from_mesh(mesh, tp="explicit")
+    assert p.data_axes == ("pod", "data") and p.model_axis == "model"
+    assert p.tp is TPStyle.EXPLICIT and p.tp_size == 8
+    assert p.use_explicit_tp
+    # tp_axis only exists INSIDE the shard_map body
+    assert p.tp_axis is None
+    inner = p.inner()
+    assert inner.mesh is None and inner.tp_axis == "model"
+    assert inner.tp_size == 8
+
+
+def test_phase_coercion_and_unknown_phase():
+    assert Phase.coerce("train") is Phase.TRAIN
+    assert Phase.coerce(Phase.DECODE) is Phase.DECODE
+    with pytest.raises(ValueError, match="unknown phase"):
+        Phase.coerce("warmup")
+    with pytest.raises(ValueError, match="unknown phase"):
+        ExecutionPlan.resolve("warmup")
+    with pytest.raises(ValueError, match="unknown TP style"):
+        TPStyle.coerce("megatron")
+
+
+def test_with_phase_is_pure():
+    p = ExecutionPlan.single_device()
+    q = p.with_phase("decode")
+    assert q.phase is Phase.DECODE and p.phase is Phase.TRAIN
+    assert not q.full_sequence and p.full_sequence
+
+
+# --------------------------------------------------------------- validate --
+def test_validate_bad_divisibility():
+    mesh = fake_mesh(model=8)
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit")
+    with pytest.raises(ValueError, match="n_heads=6 is not divisible"):
+        plan.validate(cfg_for(n_heads=6, n_kv_heads=6))
+    with pytest.raises(ValueError, match="n_kv_heads=3 divides neither"):
+        plan.validate(cfg_for(n_heads=8, n_kv_heads=3))
+    with pytest.raises(ValueError, match="d_ff=100"):
+        plan.validate(cfg_for(n_heads=8, n_kv_heads=8, d_ff=100))
+
+
+def test_validate_family_and_mesh():
+    mesh = fake_mesh(data=2, model=4)
+    with pytest.raises(ValueError, match="no.*explicit-TP stack"):
+        ExecutionPlan.from_mesh(mesh, tp="explicit").validate(
+            cfg_for("mamba2-370m"))
+    with pytest.raises(ValueError, match="requires a mesh"):
+        ExecutionPlan(tp=TPStyle.EXPLICIT).validate(cfg_for())
+    with pytest.raises(ValueError, match="model_axis 'tp' not in"):
+        ExecutionPlan.from_mesh(mesh, tp="explicit",
+                                model_axis="tp").validate(cfg_for())
+
+
+def test_validate_sp_needs_explicit_tp_and_full_sequence():
+    mesh = fake_mesh(model=4)
+    with pytest.raises(ValueError, match="requires tp='explicit'"):
+        ExecutionPlan.from_mesh(mesh, tp="gspmd", sp=True).validate(cfg_for())
+    with pytest.raises(ValueError, match="full-sequence"):
+        ExecutionPlan.from_mesh(mesh, tp="explicit", sp=True,
+                                phase="decode").validate(cfg_for())
+    # the supported combination passes
+    ExecutionPlan.from_mesh(mesh, tp="explicit", sp=True).validate(
+        cfg_for(n_kv_heads=4))
+
+
+# ------------------------------------------------------------- legacy shim --
+def test_legacy_dict_round_trip():
+    mesh = fake_mesh(data=2, model=4)
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit")
+    with pytest.warns(DeprecationWarning):
+        back = ExecutionPlan.from_legacy_dict(plan.to_legacy_dict())
+    assert back == plan
+    # inner (shard_map-local) plans round-trip too
+    inner = plan.inner()
+    with pytest.warns(DeprecationWarning):
+        back = ExecutionPlan.from_legacy_dict(inner.to_legacy_dict())
+    assert back.tp_axis == "model" and back.tp_size == 4
+
+
+def test_legacy_dict_via_resolve_and_unknown_keys():
+    mesh = fake_mesh(data=2, model=4)
+    legacy = {"mesh": mesh, "data_axes": ("data",), "model_axis": "model",
+              "tp": "explicit"}
+    with pytest.warns(DeprecationWarning):
+        p = ExecutionPlan.resolve(legacy)
+    assert p.use_explicit_tp and p.data_axes == ("data",)
+    # the old (mode, parallel_ctx) positional call shape
+    with pytest.warns(DeprecationWarning):
+        p = ExecutionPlan.resolve("prefill", legacy)
+    assert p.phase is Phase.PREFILL and p.tp is TPStyle.EXPLICIT
+    with pytest.raises(ValueError, match="unknown keys"):
+        with pytest.warns(DeprecationWarning):
+            ExecutionPlan.from_legacy_dict({"mesh": mesh, "typo": 1})
+
+
+def test_resolve_rejects_plan_plus_legacy():
+    with pytest.raises(ValueError, match="not both"):
+        ExecutionPlan.resolve(ExecutionPlan.single_device(), {"mesh": None})
+
+
+def test_legacy_dict_cannot_express_sp():
+    """A legacy dict has no SP slot — exporting must raise, not silently
+    degrade to the replicated layout."""
+    mesh = fake_mesh(model=4)
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit", sp=True)
+    with pytest.raises(ValueError, match="cannot be expressed"):
+        plan.to_legacy_dict()
+
+
+# ------------------------------------------- SP == replicated (2 devices) --
+def test_sp_logits_match_replicated_two_device_mesh():
+    """SP-vs-replicated logits equivalence for preln/fal/falplus on a
+    2-device CPU mesh (subprocess keeps the main suite single-device)."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_config
+from repro.core.plan import ExecutionPlan
+from repro.models import model as M
+mesh = jax.make_mesh((2,), ('model',))
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 500)
+for mode in ('preln', 'fal', 'falplus'):
+    cfg = get_config('llama3.2-3b').reduced().replace(connection=mode)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b = {'tokens': toks % cfg.vocab}
+    ref, _, _ = M.forward(params, cfg, b)
+    plan = ExecutionPlan.from_mesh(mesh, tp='explicit', sp=True).validate(cfg)
+    with mesh:
+        y, _, _ = jax.jit(lambda p, b: M.forward(p, cfg, b, plan))(params, b)
+    err = float(np.max(np.abs(np.asarray(y) - np.asarray(ref))))
+    assert err < 5e-4, (mode, err)
+print('OK')
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
