@@ -21,6 +21,19 @@ def bench(csv):
     B, P = 8, 128
     toks = jax.random.randint(jax.random.PRNGKey(0), (B, P), 0, cfg0.vocab)
 
+    def time_decode(serve, params):
+        """Prime the cache with one step, then time 20 decode steps; one
+        protocol for the sequential and dual measurements."""
+        cache = M.init_cache(cfg0, B, 512, "float32")
+        nxt, _, cache = serve(params, cache, toks[:, :1],
+                              jnp.zeros((B,), jnp.int32))
+        t0 = time.time()
+        for t in range(1, 21):
+            nxt, _, cache = serve(params, cache, nxt[:, None],
+                                  jnp.full((B,), t, jnp.int32))
+        nxt.block_until_ready()
+        return (time.time() - t0) / 20
+
     base = {}
     for mode in ("preln", "fal"):
         cfg = cfg0.replace(connection=mode)
@@ -38,21 +51,23 @@ def bench(csv):
             f"batch={B};prompt={P}")
 
         # decode: per-token latency
-        serve = jax.jit(make_serve_step(cfg))
-        cache = M.init_cache(cfg, B, 512, "float32")
-        nxt, _, cache = serve(params, cache, toks[:, :1],
-                              jnp.zeros((B,), jnp.int32))
-        t0 = time.time()
-        for t in range(1, 21):
-            nxt, _, cache = serve(params, cache, nxt[:, None],
-                                  jnp.full((B,), t, jnp.int32))
-        nxt.block_until_ready()
-        per_tok = (time.time() - t0) / 20
+        per_tok = time_decode(jax.jit(make_serve_step(cfg)), params)
         base[mode] = per_tok
         csv(f"inference_fig19_decode_{mode}", per_tok * 1e6,
             f"tokens_per_s={B/per_tok:.0f}")
+
+        if mode == "fal":
+            # dual-branch decode: MHA||MLP branch-parallel steady-state
+            # blocks off the first-attention signal; the delta vs
+            # sequential fal decode is the branch overlap
+            per_tok_d = time_decode(
+                jax.jit(make_serve_step(cfg, dual_branch=True)), params)
+            base["dual"] = per_tok_d
+            csv("inference_dual_branch_decode", per_tok_d * 1e6,
+                f"tokens_per_s={B/per_tok_d:.0f}")
     csv("inference_fig19_speedup", 0,
-        f"fal_vs_preln={base['preln']/base['fal']:.3f}")
+        f"fal_vs_preln={base['preln']/base['fal']:.3f};"
+        f"dual_vs_sequential_fal={base['fal']/base['dual']:.3f}")
 
     # continuous batching engine throughput
     cfg = cfg0.replace(connection="fal")

@@ -1,14 +1,33 @@
 """Serving benchmark: ragged Poisson arrivals through the paged engine vs
 the seed token-by-token engine — tok/s, p50/p99 request latency, page
-utilization, preemption count.
+utilization, preemption count.  ``--dual`` additionally runs the same
+workload through the dual-branch (MHA||MLP) engine, asserts its tokens are
+identical to the sequential paged run, records tok/s for BOTH paths, and
+gates on the structural assertion that a dual-branch decode tick lowers to
+the SAME collective counts as a sequential one under explicit TP.
 
-The workload is identical for both engines (same prompts, arrival ticks and
-generation lengths, greedy decoding), so the delta isolates the two engine
-changes: chunked batched prefill (one multi-token dispatch per chunk vs one
-dispatch per prompt token) and the paged cache (pages sized to traffic vs a
-contiguous (B, max_seq) reservation).
+The workload is identical for every engine (same prompts, arrival ticks and
+generation lengths, greedy decoding), so the deltas isolate the engine
+changes: chunked batched prefill vs one dispatch per prompt token, the
+paged cache vs a contiguous (B, max_seq) reservation, and branch-parallel
+vs serial MHA->MLP block execution.
+
+Standalone:  PYTHONPATH=src python benchmarks/bench_serving.py [--dual]
+             [--json] (writes BENCH_serving.json)
 """
 from __future__ import annotations
+
+import os
+
+# standalone runs need the same forced host-device count benchmarks.run
+# applies (the --dual structural gate lowers on a 2-device mesh); must run
+# BEFORE jax import, no-op when run.py already forced >= 8
+try:
+    from benchmarks.hostdev import force_host_devices
+except ImportError:   # plain-script invocation: benchmarks/ itself on path
+    from hostdev import force_host_devices
+
+force_host_devices()
 
 import time
 
@@ -51,26 +70,65 @@ def _drive(submit, step, pending, active_or_queued):
     return time.time() - t0, tick
 
 
-def bench(csv):
+def _warmup(engine, mk_req):
+    """Compile the engine's programs outside the timed region (the paged
+    engine has two traces: (B, chunk) prefill and (B, 1) decode)."""
+    engine.submit(mk_req())
+    engine.run()
+
+
+def _run_paged(cfg, params, work, ecfg):
+    """Drive one paged-engine run over ``work``; returns (wall seconds,
+    finished requests, warmup-corrected stats)."""
+    eng = PagedEngine(cfg, params, ecfg)
+    _warmup(eng, lambda: ServeRequest(rid=-1, prompt=np.arange(40) % cfg.vocab,
+                                      max_new=4))
+    # drop the warmup request from every reported stat, not just the
+    # request list (utilization samples, page peak, call counters)
+    eng.finished.clear()
+    eng._util.clear()
+    eng.allocator.peak_in_use = eng.allocator.in_use
+    eng.decode_calls = eng.preemptions = 0
+    eng.prefill_tokens = eng.decode_tokens = 0
+    pre_prefill_calls = eng.prefill_calls    # jit warm, so keep the counter
+
+    def submit(w, tick):
+        eng.submit(ServeRequest(rid=w["rid"], prompt=w["prompt"],
+                                max_new=w["max_new"]))
+
+    dt, _ = _drive(
+        submit, eng.step, list(work),
+        lambda: eng.queue or any(s is not None for s in eng.slots))
+    st = eng.stats()
+    st["prefill_calls"] -= pre_prefill_calls
+    return dt, eng.finished, st
+
+
+def _dual_structural_gate():
+    """Shared gate (core.tp.assert_dual_no_extra_collectives) on a 2-device
+    mesh: dual-branch decode ticks must lower to the SAME collective counts
+    as sequential ones (ONE fused all-reduce).  Returns the fal counts."""
+    from repro.core import tp
+    mesh = jax.make_mesh((2,), ("model",))
+    return tp.assert_dual_no_extra_collectives(mesh, modes=("fal",))["fal"]
+
+
+def bench(csv, dual=False):
     cfg = get_config("gpt2-117m").replace(
         n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, d_ff=1024,
         vocab=2048, max_seq=512, dtype="float32", param_dtype="float32",
         remat=False, attn_block_q=64, attn_block_k=128, connection="fal")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     max_seq, slots = 160, 4
-
-    def warmup(engine, mk_req):
-        """Compile the engine's programs outside the timed region (the paged
-        engine has two traces: (B, chunk) prefill and (B, 1) decode)."""
-        engine.submit(mk_req())
-        engine.run()
+    data = {}
 
     # ---- seed engine: contiguous cache, one token per tick ---------------
     work = _workload(cfg.vocab)
     seed_eng = ContinuousBatcher(cfg, params, batch_slots=slots,
                                  max_seq=max_seq)
-    warmup(seed_eng, lambda: Request(rid=-1, prompt=np.arange(40) % cfg.vocab,
-                                     max_new=4))
+    _warmup(seed_eng, lambda: Request(rid=-1,
+                                      prompt=np.arange(40) % cfg.vocab,
+                                      max_new=4))
     seed_done = []
 
     def submit_seed(w, tick):
@@ -83,35 +141,15 @@ def bench(csv):
     toks_seed = sum(len(r.generated) for r in seed_done)
     csv("serving_seed_engine", dt_seed * 1e6,
         f"tok_per_s={toks_seed/dt_seed:.0f};requests={len(work)}")
+    data["seed"] = {"tok_per_s": toks_seed / dt_seed,
+                    "requests": len(work)}
 
     # ---- paged engine: chunked batched prefill + paged KV ----------------
     work = _workload(cfg.vocab)
-    eng = PagedEngine(cfg, params, EngineConfig(
-        page_size=16, num_pages=48, slots=slots, prefill_chunk=32,
-        max_seq=max_seq))
-    warmup(eng, lambda: ServeRequest(rid=-1, prompt=np.arange(40) % cfg.vocab,
-                                     max_new=4))
-    # drop the warmup request from every reported stat, not just the
-    # request list (utilization samples, page peak, call counters)
-    eng.finished.clear()
-    eng._util.clear()
-    eng.allocator.peak_in_use = eng.allocator.in_use
-    eng.decode_calls = eng.preemptions = 0
-    eng.prefill_tokens = eng.decode_tokens = 0
-
-    pre_prefill_calls = eng.prefill_calls    # jit warm, so keep the counter
-
-    def submit_paged(w, tick):
-        eng.submit(ServeRequest(rid=w["rid"], prompt=w["prompt"],
-                                max_new=w["max_new"]))
-
-    dt, _ = _drive(
-        submit_paged, eng.step, list(work),
-        lambda: eng.queue or any(s is not None for s in eng.slots))
-    done = eng.finished
+    ecfg = EngineConfig(page_size=16, num_pages=48, slots=slots,
+                        prefill_chunk=32, max_seq=max_seq)
+    dt, done, st = _run_paged(cfg, params, work, ecfg)
     toks = sum(len(r.generated) for r in done)
-    st = eng.stats()
-    st["prefill_calls"] -= pre_prefill_calls
     lat_ticks = sorted(r.finish_tick - r.submit_tick for r in done)
     p50 = lat_ticks[len(lat_ticks) // 2]
     p99 = lat_ticks[min(len(lat_ticks) - 1,
@@ -127,3 +165,74 @@ def bench(csv):
         f"prefill_dispatches={st['prefill_calls']};"
         f"seed_prefill_dispatches~={sum(len(w['prompt']) for w in work)}")
     assert toks == toks_seed, (toks, toks_seed)
+    data["paged"] = {"tok_per_s": toks / dt, "p50_ticks": p50,
+                     "p99_ticks": p99,
+                     "mean_page_utilization": st["mean_page_utilization"],
+                     "preemptions": st["preemptions"]}
+
+    if not dual:
+        return data
+
+    # ---- dual-branch engine: MHA||MLP branch-parallel decode dispatch ----
+    work = _workload(cfg.vocab)
+    import dataclasses
+    dt_d, done_d, _ = _run_paged(cfg, params, work,
+                                 dataclasses.replace(ecfg, dual_branch=True))
+    toks_d = sum(len(r.generated) for r in done_d)
+    # the CPU fallback replays the sequential path's exact ops, so tokens
+    # are identical request-for-request; the fused TPU kernel's tiled FFN
+    # accumulation is only tolerance-close to mlp_apply, where a near-tie
+    # argmax may legitimately flip — don't hard-fail there
+    from repro.kernels.ops import _default_use_pallas
+    tok_map, tok_map_d = ({r.rid: r.generated for r in done},
+                          {r.rid: r.generated for r in done_d})
+    if not _default_use_pallas():
+        assert tok_map_d == tok_map, \
+            "dual-branch tokens diverged from sequential decode"
+    elif tok_map_d != tok_map:
+        csv("serving_dual_branch_token_drift", 0,
+            f"mismatched_requests="
+            f"{sum(tok_map_d[r] != tok_map[r] for r in tok_map)}")
+    csv("serving_dual_branch_engine", dt_d * 1e6,
+        f"tok_per_s={toks_d/dt_d:.0f};"
+        f"dual_vs_sequential={dt/dt_d:.2f}")
+    data["dual"] = {"tok_per_s": toks_d / dt_d,
+                    "sequential_tok_per_s": toks / dt,
+                    "speedup_vs_sequential": dt / dt_d}
+
+    # structural gate: no extra collectives under explicit TP
+    if len(jax.devices()) >= 2:
+        counts = _dual_structural_gate()
+        csv("serving_dual_branch_collectives", 0,
+            f"sequential={counts['sequential']};dual={counts['dual']}")
+        data["dual"]["collectives"] = counts
+    else:
+        csv("serving_dual_branch_collectives", 0, "SKIPPED_single_device")
+    return data
+
+
+def main():
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dual", action="store_true",
+                    help="also bench the dual-branch engine + structural "
+                         "collectives gate")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_serving.json")
+    ap.add_argument("--json-dir", default=".")
+    args = ap.parse_args()
+
+    def csv(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    data = bench(csv, dual=args.dual)
+    if args.json:
+        path = os.path.join(args.json_dir, "BENCH_serving.json")
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        print(f"# wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Force >= n XLA host-platform devices BEFORE jax is imported.
+
+bench_comm needs >= 8 host devices and the serving dual-branch structural
+gate lowers on a 2-device mesh; everything else is happy with them too.
+APPEND to any user-exported XLA_FLAGS — setdefault would silently drop the
+forced count whenever XLA_FLAGS is already set — and RAISE a user-exported
+count below ``n`` (keeping it would still fail the `len(jax.devices()) >=
+n` asserts downstream).  Call this before the first ``import jax`` in every
+benchmark entry point (``benchmarks.run``, standalone ``bench_serving``).
+"""
+import os
+import re
+
+
+def force_host_devices(n: int = 8) -> None:
+    force = f"--xla_force_host_platform_device_count={n}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (flags + " " + force).strip()
+    elif int(m.group(1)) < n:
+        os.environ["XLA_FLAGS"] = flags.replace(m.group(0), force)

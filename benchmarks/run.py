@@ -7,20 +7,9 @@ machine-readable perf trajectory).
 """
 import os
 
-# bench_comm needs >= 8 host devices; everything else is happy with them
-# too.  APPEND to any user-exported XLA_FLAGS — setdefault would silently
-# drop the forced count whenever XLA_FLAGS is already set — and RAISE a
-# user-exported count below 8 (keeping it would still fail bench_comm's
-# `len(jax.devices()) >= 8` assert).
-import re as _re
+from benchmarks.hostdev import force_host_devices
 
-_FORCE = "--xla_force_host_platform_device_count=8"
-_flags = os.environ.get("XLA_FLAGS", "")
-_m = _re.search(r"--xla_force_host_platform_device_count=(\d+)", _flags)
-if _m is None:
-    os.environ["XLA_FLAGS"] = (_flags + " " + _FORCE).strip()
-elif int(_m.group(1)) < 8:
-    os.environ["XLA_FLAGS"] = _flags.replace(_m.group(0), _FORCE)
+force_host_devices()     # must precede the first jax import (see hostdev)
 
 import argparse
 import json
@@ -42,6 +31,11 @@ def main() -> None:
                     help="comm suite: also lower the sequence-parallel "
                          "ExecutionPlan per mode and assert the tp_size "
                          "reduce-bytes reduction")
+    ap.add_argument("--dual", action="store_true",
+                    help="serving suite: also bench the dual-branch "
+                         "(MHA||MLP) engine, assert token identity vs the "
+                         "sequential path and the no-extra-collectives "
+                         "structural gate under explicit TP")
     args = ap.parse_args()
 
     def csv(name, us, derived=""):
@@ -61,7 +55,7 @@ def main() -> None:
             csv, steps=max(steps * 2 // 3, 50)),
         "motivation": lambda: bench_motivation.bench(csv, steps=steps),
         "inference": lambda: bench_inference.bench(csv),
-        "serving": lambda: bench_serving.bench(csv),
+        "serving": lambda: bench_serving.bench(csv, dual=args.dual),
     }
     failures = 0
     for name, fn in suites.items():

@@ -41,6 +41,14 @@ NEEDS_LN_FAL = {"falplus", "ablation1"}
 # modes that consume the first block's attention output:
 USES_FIRST_ATTENTION = {"fal", "falplus"}
 
+#: modes whose steady-state MLP input is independent of the block's OWN
+#: attention output — the property the decode-time MHA||MLP dual-branch
+#: dispatch keys on (``ExecutionPlan(dual_branch=True)``): both branches can
+#: be issued concurrently because the MLP reads only the residual stream and
+#: the cached first-attention signal, never this block's KV gather.
+DUAL_BRANCH_MODES = tuple(m for m, dep in _NEEDS_LOCAL_ATTN.items()
+                          if not dep)  # ('parallel', 'fal', 'ablation2')
+
 
 def mlp_input_depends_on_local_attention(mode: str) -> bool:
     return _NEEDS_LOCAL_ATTN[mode]

@@ -28,6 +28,13 @@ Plan axes:
   sequence dimension; blocks pay reduce-scatter/all-gather pairs instead of
   all-reduces (same reduce-collective count, per-block reduce bytes cut by
   ``tp_size``; ``models/blocks.py``).
+* ``dual_branch`` — decode-time MHA||MLP branch parallelism: steady-state
+  blocks compute the MLP branch from the (cached) first-attention signal
+  concurrently with the attention branch's KV gather instead of serially
+  after it (``models/blocks.py::_block_apply_dual``; the paper's "parallel
+  execution of MHA and MLP" claim at serving time).  Valid only for
+  decode/paged phases and connection modes whose MLP input is independent
+  of the block's own attention (``core.fal.DUAL_BRANCH_MODES``).
 
 Inside the explicit-TP shard_map the blocks see ``plan.inner()`` — the same
 plan with ``mesh=None`` and ``local_tp_size`` set; ``plan.tp_axis`` is then
@@ -92,6 +99,12 @@ class TPStyle(enum.Enum):
 #: families with an explicit partial-sum TP stack (decoder_stack_tp)
 EXPLICIT_TP_FAMILIES = ("dense", "moe", "vlm")
 
+#: families whose decode path runs FAL transformer blocks and therefore has
+#: a dual-branch (MHA||MLP) dispatch: the decoder family + the zamba hybrid
+#: (its weight-shared attention block is a FAL block).  audio's decoder
+#: blocks consume cross-attention (must assemble); ssm has no MHA/MLP fork.
+DUAL_BRANCH_FAMILIES = ("dense", "moe", "vlm", "hybrid")
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
@@ -104,6 +117,7 @@ class ExecutionPlan:
     phase: Phase = Phase.TRAIN
     tp: TPStyle = TPStyle.NONE
     sequence_parallel: bool = False
+    dual_branch: bool = False
     mesh: Any = None                       # jax.sharding.Mesh | None
     data_axes: Tuple[str, ...] = ()
     model_axis: str = "model"
@@ -111,15 +125,16 @@ class ExecutionPlan:
 
     # ------------------------------------------------------------- build --
     @classmethod
-    def single_device(cls, phase=Phase.TRAIN) -> "ExecutionPlan":
+    def single_device(cls, phase=Phase.TRAIN,
+                      dual_branch: bool = False) -> "ExecutionPlan":
         """Replicated single-program plan (no mesh, no TP)."""
-        return cls(phase=Phase.coerce(phase))
+        return cls(phase=Phase.coerce(phase), dual_branch=bool(dual_branch))
 
     @classmethod
     def from_mesh(cls, mesh, *, tp="gspmd", sp: bool = False,
                   phase=Phase.TRAIN, model_axis: str = "model",
-                  data_axes: Optional[Tuple[str, ...]] = None
-                  ) -> "ExecutionPlan":
+                  data_axes: Optional[Tuple[str, ...]] = None,
+                  dual_branch: bool = False) -> "ExecutionPlan":
         """Plan over ``mesh``.  ``data_axes`` defaults to every mesh axis
         except ``model_axis`` (so a ("pod", "data", "model") mesh composes
         pure DP across pods automatically)."""
@@ -127,7 +142,8 @@ class ExecutionPlan:
             data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
         return cls(phase=Phase.coerce(phase), tp=TPStyle.coerce(tp),
                    sequence_parallel=bool(sp), mesh=mesh,
-                   data_axes=tuple(data_axes), model_axis=model_axis)
+                   data_axes=tuple(data_axes), model_axis=model_axis,
+                   dual_branch=bool(dual_branch))
 
     @classmethod
     def from_legacy_dict(cls, d: dict, phase=Phase.TRAIN) -> "ExecutionPlan":
@@ -162,6 +178,10 @@ class ExecutionPlan:
         if self.sequence_parallel:
             raise ValueError(
                 "sequence_parallel plans cannot be expressed as a legacy "
+                "parallel-ctx dict; pass the ExecutionPlan itself")
+        if self.dual_branch:
+            raise ValueError(
+                "dual_branch plans cannot be expressed as a legacy "
                 "parallel-ctx dict; pass the ExecutionPlan itself")
         d = {"mesh": self.mesh, "data_axes": tuple(self.data_axes),
              "model_axis": self.model_axis}
@@ -199,6 +219,10 @@ class ExecutionPlan:
     # -------------------------------------------------------- derived -----
     def with_phase(self, phase) -> "ExecutionPlan":
         return dataclasses.replace(self, phase=Phase.coerce(phase))
+
+    def with_dual_branch(self, flag: bool = True) -> "ExecutionPlan":
+        """Same plan with MHA||MLP decode branch parallelism toggled."""
+        return dataclasses.replace(self, dual_branch=bool(flag))
 
     def inner(self) -> "ExecutionPlan":
         """The plan a shard_map local body sees: no mesh (collectives are
@@ -255,6 +279,8 @@ class ExecutionPlan:
                 f"sequence_parallel=True is a full-sequence layout "
                 f"(train/eval/prefill); phase={self.phase.value} decodes "
                 f"single tokens against KV caches")
+        if self.dual_branch:
+            self._validate_dual_branch(cfg)
         if self.tp is TPStyle.EXPLICIT:
             if self.mesh is None:
                 raise ValueError("tp='explicit' requires a mesh (the "
@@ -275,6 +301,38 @@ class ExecutionPlan:
             if bad:
                 raise ValueError(f"data_axes {bad} not in mesh axes {names}")
         return self
+
+    def _validate_dual_branch(self, cfg):
+        """MHA||MLP branch parallelism exists only where the MLP input is
+        independent of the block's own attention — fail loudly otherwise
+        instead of silently running the sequential path and mislabeling any
+        numbers collected under the plan."""
+        from repro.core import fal  # core.fal pulls models.layers; keep lazy
+        if self.phase not in (Phase.DECODE, Phase.PAGED):
+            raise ValueError(
+                f"dual_branch=True is a decode-time dispatch (decode/paged "
+                f"phases); phase={self.phase.value} runs full-sequence "
+                f"blocks whose collective structure is fixed by the "
+                f"connection mode, not by branch scheduling")
+        if cfg.family not in DUAL_BRANCH_FAMILIES:
+            raise ValueError(
+                f"dual_branch=True: family '{cfg.family}' has no MHA||MLP "
+                f"decode dispatch ({DUAL_BRANCH_FAMILIES} only) — audio "
+                f"decoder blocks consume cross-attention and ssm blocks "
+                f"have no attention/MLP fork; running it would silently "
+                f"fall back and mislabel any numbers")
+        if cfg.connection not in fal.DUAL_BRANCH_MODES:
+            raise ValueError(
+                f"dual_branch=True requires a connection whose MLP input "
+                f"is independent of the block's own attention "
+                f"({'/'.join(fal.DUAL_BRANCH_MODES)}); "
+                f"'{cfg.connection}' must assemble MHA output before the "
+                f"MLP can start, so the branches cannot run concurrently")
+        if cfg.post_norms:
+            raise ValueError(
+                "dual_branch=True: post_norms normalise the assembled "
+                "attention output before the residual merge — the MLP "
+                "branch cannot be issued concurrently with the KV gather")
 
     def _check_divisibility(self, cfg):
         """Explicit TP shards heads/hidden/experts evenly — fail loudly when

@@ -85,6 +85,103 @@ def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model",
     return init_fn, jax.jit(fwd)
 
 
+def make_tp_decode_step(mesh, d, d_ff, n_heads, mode, axis="model", *,
+                        dual=False, page_size=8, num_pages=9):
+    """(init_fn, jitted paged decode tick) for ONE steady-state block under
+    an explicit-TP shard_map — the structural harness for the dual-branch
+    collectives gate: lowering the same tick with ``dual=False`` and
+    ``dual=True`` and diffing ``count_collectives`` asserts that MHA||MLP
+    branch parallelism adds NO collectives (both pay the single fused
+    all-reduce of the fal/parallel steady state; kept by
+    ``models/blocks.py::_block_apply_dual`` merging the MHA and MLP partial
+    sums before the one psum).
+
+    ``init_fn(key)`` returns (block_params, paged kv cache); the step is
+    ``step(params, x (B,1,d), cache, block_tables (B,T), pos (B,),
+    n_valid (B,), a1_sig (B,1,d)) -> (x_out, new_cache)``.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.core.compat import shard_map
+    from repro.core.plan import ExecutionPlan, Phase
+    from repro.launch import mesh as MX
+    from repro.models import attention as A
+    from repro.models import blocks as BL
+
+    cfg = bench_stack_config(1, d, d_ff, n_heads, mode)
+    plan = ExecutionPlan.from_mesh(mesh, tp="explicit", phase=Phase.PAGED,
+                                   model_axis=axis,
+                                   dual_branch=dual).validate(cfg)
+    inner = plan.inner()
+
+    def init_fn(key):
+        params = BL.block_init(key, cfg, kind="dense")
+        cache = A.gqa_init_paged_cache(cfg, num_pages, page_size,
+                                       cfg.dtype)
+        return params, cache
+
+    kv = P(None, None, axis, None)               # pages: Hkv over model
+
+    def step(params, x, cache, bt, pos, n_valid, a1_sig):
+        wspecs = MX.param_specs(params, cfg)
+
+        def local(bp, x, ck, cv, bt, pos, n_valid, sig):
+            out, _, _, new_cache = BL.block_apply(
+                bp, cfg, x, sig, None, 0, kind="dense", is_block0=False,
+                plan=inner, cache={"k": ck, "v": cv}, pos=pos,
+                block_tables=bt, n_valid=n_valid)
+            return out, new_cache["k"], new_cache["v"]
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(wspecs, P(), kv, kv, P(), P(), P(), P()),
+                       out_specs=(P(), kv, kv),
+                       check_vma=False)
+        out, ck, cv = fn(params, x, cache["k"], cache["v"], bt, pos,
+                         n_valid, a1_sig)
+        return out, {"k": ck, "v": cv}
+
+    return init_fn, jax.jit(step)
+
+
+def assert_dual_no_extra_collectives(mesh, modes=("fal", "parallel"), *,
+                                     check_numeric=True):
+    """THE dual-branch structural gate, shared by
+    ``benchmarks/bench_serving.py --dual`` and ``tests/test_dual_branch.py``
+    (one implementation so the two cannot drift): per mode, lower one
+    steady-state block's paged decode tick via ``make_tp_decode_step`` with
+    and without ``dual`` and assert the collective counts are IDENTICAL —
+    both pay exactly ONE fused all-reduce — and (``check_numeric``) that the
+    outputs match.  Returns {mode: {"sequential": counts, "dual": counts}}.
+    Needs >= 2 devices in ``mesh``.
+    """
+    import numpy as np
+    B, T, page, d = 2, 4, 8, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, d))
+    bt = jnp.asarray(np.arange(1, 1 + B * T).reshape(B, T), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    nv = jnp.ones((B,), jnp.int32)
+    sig = jax.random.normal(jax.random.PRNGKey(2), (B, 1, d))
+    result = {}
+    for mode in modes:
+        counts, outs = {}, {}
+        for dual in (False, True):
+            init_fn, step = make_tp_decode_step(mesh, d, 128, 4, mode,
+                                                dual=dual, page_size=page)
+            params, cache = init_fn(jax.random.PRNGKey(0))
+            with mesh:
+                hlo = step.lower(params, x, cache, bt, pos, nv,
+                                 sig).compile().as_text()
+                outs[dual], _ = step(params, x, cache, bt, pos, nv, sig)
+            counts["dual" if dual else "sequential"] = \
+                count_collectives(hlo)
+        assert counts["sequential"].get("all-reduce", 0) == 1, (mode, counts)
+        assert counts["dual"] == counts["sequential"], (mode, counts)
+        if check_numeric:
+            err = float(jnp.max(jnp.abs(outs[True] - outs[False])))
+            assert err < 1e-5, (mode, err)
+        result[mode] = counts
+    return result
+
+
 # ------------------------------------------------------------------------- #
 _COLL_RE = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"

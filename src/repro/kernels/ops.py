@@ -53,6 +53,44 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
 
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
                                              "interpret"))
+def dual_branch_decode(q, k_pages, v_pages, block_tables, seq_lens, mlp_in,
+                       ffn, *, kind="swiglu", use_pallas=None,
+                       interpret=False):
+    """Dual-branch decode tick: paged attention gather || dense FFN, issued
+    as one dependency-free dispatch (the FAL MHA||MLP property at serving
+    time).  q: (B, H, D) one query token per request; mlp_in: (B, 1, Dm)
+    the block's MLP input (independent of this block's attention); ffn:
+    dense-MLP params {"wi"[, "wg"], "wo"}.  Returns
+    (attn (B, H, Dv), ffn_out (B, 1, Dm)).
+
+    On TPU (or interpret mode), when d_ff divides into Hkv*T tiles, both
+    branches run in ONE fused Pallas kernel that overlaps the block-table
+    page DMAs with the FFN matmuls (``kernels.dual_branch``); otherwise the
+    branches are issued as two independent ops (XLA overlaps them).  The
+    CPU path runs exactly the ops of the sequential decode path — the
+    gather-based ref oracle plus ``layers.mlp_apply`` — so dual-branch
+    logits are bit-identical to sequential ones."""
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    from repro.models.layers import mlp_apply
+    n_tiles = k_pages.shape[2] * block_tables.shape[1]
+    if (use_pallas or interpret) and ffn["wi"].shape[-1] % n_tiles == 0:
+        from repro.kernels import dual_branch as _db
+        attn, y = _db.fused_dual_branch_decode(
+            q, k_pages, v_pages, block_tables, seq_lens, mlp_in[:, 0], ffn,
+            kind=kind, interpret=interpret)
+        return attn, y[:, None]
+    if use_pallas:
+        from repro.kernels import paged_attention as _pa
+        attn = _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                          seq_lens)
+    else:
+        attn = _ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                        seq_lens)
+    return attn, mlp_apply(ffn, mlp_in, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
+                                             "interpret"))
 def fused_ln_add(x, a1n, scale, bias=None, *, kind="rmsnorm",
                  use_pallas=None, interpret=False):
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas

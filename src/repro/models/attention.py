@@ -167,16 +167,27 @@ def gqa_init_paged_cache(cfg, num_pages, page_size, dtype):
     }
 
 
-def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
-                    window=0):
-    """Chunked decode/prefill against a paged cache.  x: (B, C, D) with C >= 1
-    (C == 1 is a decode tick).  Returns (out (B,C,D), new_cache)."""
-    B, C = x.shape[:2]
+def _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables, pos, n_valid):
+    """Shared prologue of the sequential and dual-branch paged paths:
+    project q/k/v at the chunk's positions and scatter k/v into the page
+    pools.  Returns (q, kc, vc, positions) — ONE implementation so the two
+    paths cannot drift apart (they are asserted bit-identical)."""
+    C = x.shape[1]
     page = cache["k"].shape[1]
     positions = pos[:, None] + jnp.arange(C)[None]
     q, k, v = gqa_qkv(p, cfg, x, positions)
     kc = paged_scatter(cache["k"], k, block_tables, pos, n_valid, page)
     vc = paged_scatter(cache["v"], v, block_tables, pos, n_valid, page)
+    return q, kc, vc, positions
+
+
+def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
+                    window=0):
+    """Chunked decode/prefill against a paged cache.  x: (B, C, D) with C >= 1
+    (C == 1 is a decode tick).  Returns (out (B,C,D), new_cache)."""
+    B, C = x.shape[:2]
+    q, kc, vc, positions = _gqa_paged_qkv_scatter(p, cfg, x, cache,
+                                                  block_tables, pos, n_valid)
     if C == 1 and cfg.attn_softcap == 0.0 \
             and isinstance(window, int) and window == 0:
         # single-token full-attention tick: the paged-attention kernel path
@@ -190,6 +201,29 @@ def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
                             paged_gather(vc, block_tables), positions,
                             window=window, cap=cfg.attn_softcap)
     return o.reshape(B, C, -1) @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}
+
+
+def gqa_paged_dual(p, ffn, cfg, x, mlp_in, cache, block_tables, pos,
+                   n_valid):
+    """Dual-branch single-token paged tick: the block-table attention gather
+    and the dense FFN matmuls go down as ONE fused dispatch
+    (``kernels.ops.dual_branch_decode``) so the TPU overlaps page DMAs with
+    FFN MXU work; the CPU fallback runs exactly the sequential path's ops
+    (gather-free ref attention + ``layers.mlp_apply``), keeping dual-branch
+    logits bit-identical to sequential decode.
+
+    x: (B, 1, D) post-ln1 attention input; mlp_in: (B, 1, D) the block's
+    MLP input (independent of this block's attention — the FAL property).
+    Returns (attn_out (B,1,D), ffn_out (B,1,D), new_cache).
+    """
+    B, C = x.shape[:2]
+    q, kc, vc, _ = _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables,
+                                          pos, n_valid)
+    from repro.kernels import ops
+    o, y = ops.dual_branch_decode(q[:, 0], kc, vc, block_tables, pos + 1,
+                                  mlp_in, ffn, kind=cfg.mlp)
+    a = o[:, None].reshape(B, C, -1) @ p["wo"].astype(x.dtype)
+    return a, y, {"k": kc, "v": vc}
 
 
 # ------------------------------------------------------------------------- #

@@ -101,6 +101,18 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
     reduce-scatter (1/tp the bytes) behind an all-gather of the LN region.
     """
     plan = ExecutionPlan.resolve(plan)
+    if plan.dual_branch and not is_block0 \
+            and plan.phase in (Phase.DECODE, Phase.PAGED):
+        # steady-state MHA||MLP branch parallelism (plan.validate guarantees
+        # a DUAL_BRANCH_MODES connection and no post-norms); block 0 stays
+        # sequential — it must assemble its attention to export the signal
+        if "xattn" in p:
+            raise NotImplementedError(
+                "dual-branch decode supports self-attention decoder blocks "
+                "only (cross-attention consumes the assembled attention)")
+        return _block_apply_dual(p, cfg, x, a1_sig, window, kind=kind,
+                                 plan=plan, cache=cache, pos=pos,
+                                 block_tables=block_tables, n_valid=n_valid)
     if plan.sequence_parallel and plan.tp_axis is not None \
             and plan.full_sequence:
         if "xattn" in p or not causal:
@@ -175,6 +187,69 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
     if cfg.post_norms:
         y = L.norm_apply(p["post_ffn"], y, cfg.norm)
     return resid + y, a, aux, new_cache
+
+
+def _block_apply_dual(p, cfg, x, a1_sig, window, *, kind,
+                      plan: ExecutionPlan, cache, pos, block_tables,
+                      n_valid):
+    """Branch-parallel decode block: MHA || MLP (``plan.dual_branch``).
+
+    For ``core.fal.DUAL_BRANCH_MODES`` the MLP input is a function of only
+    the residual stream and the (cached) first-attention signal — never this
+    block's own attention — so the two branches share no data dependency:
+
+        MLP branch : mlp_input(x, a1_sig) -> FFN            (MXU-bound)
+        MHA branch : ln1(x) -> qkv -> paged KV gather -> wo (DMA-bound)
+
+    This function forms the MLP input FIRST, so the FFN matmuls are never
+    serialized behind the attention branch's block-table gather; on the
+    paged C == 1 dense fast path both branches go down as ONE fused kernel
+    dispatch (``attention.gqa_paged_dual`` ->
+    ``kernels.ops.dual_branch_decode``) that overlaps page DMAs with FFN
+    MXU work.  Off the fused-kernel path the arithmetic is op-for-op the
+    sequential path's — same primitives, same operands, same residual-merge
+    association — so logits are bit-identical (the fused TPU kernel's tiled
+    accumulation is tolerance-close instead); under explicit TP the two
+    partial sums merge in the SAME single fused all-reduce as the
+    sequential fused path (no extra collectives; asserted structurally in
+    ``core.tp.make_tp_decode_step`` consumers).
+    """
+    axis = plan.tp_axis
+    # MLP branch input — depends on (x, a1_sig) only; `a=None` is safe
+    # because DUAL_BRANCH_MODES never read the block's own attention
+    mlp_in = fal.mlp_input(cfg, p, x, None, a1_sig)
+    h = L.norm_apply(p["ln1"], x, cfg.norm)
+    C = x.shape[1]
+    if (plan.phase is Phase.PAGED and kind == "dense" and not cfg.use_mla
+            and C == 1 and cfg.attn_softcap == 0.0
+            and isinstance(window, int) and window == 0):
+        # single-token dense tick: fused dual-branch dispatch
+        a, y, new_cache = A.gqa_paged_dual(p["attn"], p["ffn"], cfg, h,
+                                           mlp_in, cache, block_tables,
+                                           pos, n_valid)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        if plan.phase is Phase.PAGED:
+            if cfg.use_mla:
+                a, new_cache = A.mla_paged_apply(p["attn"], cfg, h, cache,
+                                                 block_tables, pos, n_valid)
+            else:
+                a, new_cache = A.gqa_paged_apply(p["attn"], cfg, h, cache,
+                                                 block_tables, pos, n_valid,
+                                                 window=window)
+        else:
+            if cfg.use_mla:
+                a, new_cache = A.mla_decode(p["attn"], cfg, h, cache, pos)
+            else:
+                a, new_cache = A.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                            window=window)
+        y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
+    if axis is not None:
+        # one fused collective per block, same as the sequential fused path
+        return x + _assemble(a + y, axis), a, aux, new_cache
+    # replicated: keep the sequential path's (x + a) + y association so
+    # dual-branch logits are bit-identical, not merely close
+    return (x + a) + y, a, aux, new_cache
 
 
 def _block_apply_sp(p, cfg, x_s, a1_sig, positions, window, *, kind,

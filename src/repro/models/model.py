@@ -357,8 +357,9 @@ def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype):
         "block0": c0, "blocks": stacked,
         # per-slot FAL export: block 1's first-attention signal at the last
         # position this slot processed.  Written every paged tick so engine
-        # consumers (telemetry, the fal-mode MHA||MLP dispatch) read the
-        # cached tensor instead of re-running block 1's export.
+        # consumers (telemetry, and the dual-branch MHA||MLP decode dispatch
+        # under plan.dual_branch) read the cached tensor instead of
+        # re-running block 1's export.
         "a1_sig": jnp.zeros((slots, cfg.d_model), jnp.dtype(dtype)),
     }
 
@@ -370,6 +371,15 @@ def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan):
     valid tokens per request (invalid lanes -> scratch page), block_tables
     (B, T).  Returns (logits (B, C, V), new_cache).  C == 1 is a decode
     tick; C > 1 a chunked-prefill tick — one jitted program each.
+
+    With ``plan.dual_branch`` (fal/parallel-family connections only,
+    ``plan.validate``) the steady-state blocks run the MHA||MLP
+    branch-parallel dispatch: the MLP branch reads the cached per-slot
+    first-attention signal (``cache['a1_sig']``, refreshed by block 0 at
+    the top of the tick) concurrently with the attention branch's paged KV
+    gather — logits are bit-identical to the sequential path whenever both
+    run the same dispatch (always on the CPU fallback; the fused TPU kernel
+    is tolerance-close to the unfused ops).
     """
     tokens, pos = batch["tokens"], batch["pos"]
     bt, n_valid = batch["block_tables"], batch["n_valid"]
@@ -389,20 +399,31 @@ def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan):
         kind=_layer_kind(cfg, 0), is_block0=True, plan=plan,
         cache=cache["block0"], pos=pos, block_tables=bt, n_valid=n_valid)
     a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+    new_caches = {"block0": c0}
 
-    x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
-                                         cache["blocks"], plan,
-                                         block_tables=bt, n_valid=n_valid)
-    new_caches = {"block0": c0, "blocks": blocks_new}
-
-    # stash the per-request FAL export at each request's last valid position;
-    # slots sitting this call out (n_valid == 0) keep their cached signal
+    # stash the per-request FAL export at each request's last valid position
+    # BEFORE the steady-state stack runs; slots sitting this call out
+    # (n_valid == 0) keep their cached signal
     sig = a1_sig if a1_sig is not None else a1_raw
     last = jnp.clip(n_valid - 1, 0, C - 1)
     new_sig = jnp.take_along_axis(
         sig, last[:, None, None], axis=1)[:, 0].astype(cache["a1_sig"].dtype)
     new_caches["a1_sig"] = jnp.where((n_valid > 0)[:, None], new_sig,
                                      cache["a1_sig"])
+
+    if plan.dual_branch and a1_sig is not None and C == 1:
+        # dual-branch decode tick: active lanes keep this tick's FRESH
+        # activation-dtype export (bit-identical to the sequential path for
+        # ANY cache dtype — routing it through the cache would round it);
+        # lanes sitting the tick out read their held per-slot cached signal
+        # instead of a padded lane's garbage position
+        a1_sig = jnp.where((n_valid > 0)[:, None], sig[:, 0],
+                           cache["a1_sig"].astype(x.dtype))[:, None, :]
+
+    x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, pos,
+                                         cache["blocks"], plan,
+                                         block_tables=bt, n_valid=n_valid)
+    new_caches["blocks"] = blocks_new
 
     logits = _logits(p, cfg, x)
     return logits, new_caches

@@ -18,11 +18,19 @@ from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
 
 
-def make_serve_step(cfg, plan=None):
+def make_serve_step(cfg, plan=None, dual_branch=False):
     """serve_step(params, cache, tokens (B,1), pos (B,)) ->
-    (next_token (B,), logits, new_cache).  ``plan``: ExecutionPlan (legacy
-    parallel-ctx dicts are shimmed); the phase is pinned to decode."""
+    (next_token (B,), logits, new_cache).
+
+    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the primary interface;
+    its phase is pinned to decode here.  ``dual_branch=True`` (or a plan
+    with ``dual_branch`` already set) runs the steady-state blocks with the
+    MHA||MLP branch-parallel dispatch — valid only for connections whose
+    MLP input is independent of the block's own attention (fal/parallel
+    family; ``plan.validate`` rejects the rest loudly)."""
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE)
+    if dual_branch:
+        plan = plan.with_dual_branch()
     plan.validate(cfg)
 
     def serve_step(params, cache, tokens, pos):
@@ -72,9 +80,11 @@ class ContinuousBatcher:
     vector the decode kernels consume."""
 
     def __init__(self, cfg, params, batch_slots: int, max_seq: int,
-                 cache_dtype="float32", plan=None):
+                 cache_dtype="float32", plan=None, dual_branch=False):
         self.cfg, self.params = cfg, params
         self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE)
+        if dual_branch:
+            self.plan = self.plan.with_dual_branch()
         self.B = batch_slots
         self.max_seq = max_seq
         self.cache = M.init_cache(cfg, batch_slots, max_seq, cache_dtype)

@@ -28,12 +28,17 @@ def make_paged_step(cfg, plan=None):
     n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
     sample_pos) -> (logits (B,C,V), next_tokens (B,), new_cache).
 
-    ``plan``: ExecutionPlan (legacy parallel-ctx dicts are shimmed); the
-    phase is pinned to paged.  One returned callable serves both engine
-    phases: call it with C == chunk for prefill ticks and C == 1 for decode
-    ticks (two traces, cached by shape).  Sampling is fused into the
-    program (one dispatch per tick) and the cache buffers are donated, so
-    page pools update in place instead of being copied every tick.
+    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the primary (and only
+    non-deprecated) way to configure the dispatch; its phase is pinned to
+    paged here.  ``plan.dual_branch`` selects the MHA||MLP branch-parallel
+    block for the steady-state layers (fal/parallel-family connections;
+    validated), overlapping each block's paged KV gather with its FFN off
+    the cached per-slot first-attention signal.  One returned callable
+    serves both engine phases: call it with C == chunk for prefill ticks
+    and C == 1 for decode ticks (two traces, cached by shape).  Sampling is
+    fused into the program (one dispatch per tick) and the cache buffers
+    are donated, so page pools update in place instead of being copied
+    every tick.
     """
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
     plan.validate(cfg)

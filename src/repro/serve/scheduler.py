@@ -14,7 +14,13 @@ engine with:
     the youngest other active request is evicted: its pages are released and
     it is requeued (front).  On re-admission it re-prefills prompt +
     already-generated tokens; (seed, position)-derived sampling keys make
-    the resumed continuation deterministic.
+    the resumed continuation deterministic.  Re-prefill also rebuilds the
+    slot's cached first-attention signal, so dual-branch dispatch stays
+    consistent across preempt -> resume;
+  * dual-branch decode (``EngineConfig.dual_branch``) — under fal/parallel
+    connections the steady-state blocks issue the MLP branch off the cached
+    per-slot FAL signal concurrently with the paged attention gather
+    (MHA||MLP, the paper's inference-side claim); bit-identical tokens.
 
 The oldest active request can always claim pages from younger ones, so the
 engine makes progress whenever any single request fits the pool; requests
@@ -65,6 +71,13 @@ class EngineConfig:
     max_seq: int = 256                 # per-request context cap
     admission: str = "prompt"          # 'prompt' | 'full'
     cache_dtype: str = "float32"
+    # MHA||MLP branch-parallel decode dispatch off the cached per-slot FAL
+    # signal (plan.dual_branch; fal/parallel-family connections only —
+    # ExecutionPlan.validate rejects the rest).  Logits are bit-identical
+    # to sequential decode on the CPU dispatch path (the fused TPU kernel
+    # is tolerance-close); the win is overlap of the paged KV gather with
+    # the FFN matmuls.
+    dual_branch: bool = False
 
 
 class PagedEngine:
@@ -86,6 +99,8 @@ class PagedEngine:
         # the engine stores a typed plan, not a context dict; every jitted
         # dispatch it compiles runs under this plan with phase=paged
         self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
+        if engine_cfg.dual_branch:
+            self.plan = self.plan.with_dual_branch()
         self.plan.validate(cfg)
         self.max_blocks = pages_needed(engine_cfg.max_seq,
                                        engine_cfg.page_size)

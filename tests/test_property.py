@@ -119,6 +119,60 @@ def test_moe_capacity_dispatch_positions(T, E):
             pairs.add(key)
 
 
+_DUAL_ORACLE = {}
+
+
+def _dual_oracle_cfg_params():
+    """Init the fal model once across hypothesis examples (init dominates
+    example runtime otherwise)."""
+    if not _DUAL_ORACLE:
+        cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+        from repro.models import model as M
+        _DUAL_ORACLE["cfg"] = cfg
+        _DUAL_ORACLE["params"] = M.init_params(jax.random.PRNGKey(0), cfg)
+    return _DUAL_ORACLE["cfg"], _DUAL_ORACLE["params"]
+
+
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=10),
+       st.sampled_from([4, 8]))
+@settings(max_examples=8, deadline=None)
+def test_paged_dual_branch_matches_dense_oracle(prompt, page_size):
+    """Random prompt lengths / page sizes: greedy paged DUAL-BRANCH decode
+    must match the dense full-forward oracle token-for-token (the serving
+    invariant, with the MHA||MLP dispatch in the loop)."""
+    from repro.core.plan import ExecutionPlan, Phase
+    from repro.models import model as M
+    from repro.serve.paged_cache import pages_needed
+    cfg, params = _dual_oracle_cfg_params()
+    max_new = 3
+
+    # dense oracle: greedy teacher-forced full forward
+    toks = list(prompt)
+    for _ in range(max_new):
+        lg, _, _ = M.forward(params, cfg,
+                             {"tokens": jnp.asarray([toks])}, "train")
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    oracle = toks[len(prompt):]
+
+    # paged dual-branch decode, one token per tick
+    plan = ExecutionPlan.single_device(Phase.PAGED, dual_branch=True)
+    T = pages_needed(len(prompt) + max_new, page_size)
+    cache = M.init_paged_cache(cfg, T + 2, page_size, 1, "float32")
+    bt = jnp.arange(1, 1 + T, dtype=jnp.int32)[None]
+    step = jax.jit(lambda b, c: M.paged_decode_step(params, cfg, b, c, plan))
+    got, cur = [], list(prompt)
+    for t in range(len(prompt) + max_new - 1):
+        lg, cache = step({"tokens": jnp.asarray([[cur[t]]], jnp.int32),
+                          "pos": jnp.asarray([t], jnp.int32),
+                          "n_valid": jnp.ones((1,), jnp.int32),
+                          "block_tables": bt}, cache)
+        if t >= len(prompt) - 1:
+            nxt = int(jnp.argmax(lg[0, -1]))
+            got.append(nxt)
+            cur.append(nxt)
+    assert got == oracle, (prompt, page_size, got, oracle)
+
+
 @given(st.integers(0, 1000))
 @settings(**SETTINGS)
 def test_data_pipeline_deterministic(step):
