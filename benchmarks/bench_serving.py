@@ -1,16 +1,34 @@
 """Serving benchmark: ragged Poisson arrivals through the paged engine vs
-the seed token-by-token engine — tok/s, p50/p99 request latency, page
-utilization, preemption count.  ``--dual`` additionally runs the same
-workload through the dual-branch (MHA||MLP) engine, asserts its tokens are
-identical to the sequential paged run, records tok/s for BOTH paths, and
-gates on the structural assertion that a dual-branch decode tick lowers to
-the SAME collective counts as a sequential one under explicit TP.
+the seed token-by-token engine — tok/s, p50/p99 request latency, per-tick
+decode latency, dispatches per tick, page utilization, preemption count.
 
-The workload is identical for every engine (same prompts, arrival ticks and
-generation lengths, greedy decoding), so the deltas isolate the engine
-changes: chunked batched prefill vs one dispatch per prompt token, the
-paged cache vs a contiguous (B, max_seq) reservation, and branch-parallel
-vs serial MHA->MLP block execution.
+Three paged paths are timed against the seed engine on the IDENTICAL
+workload (same prompts, arrival ticks, generation lengths, greedy
+decoding):
+
+  * ``paged``  — the retired two-program engine (``mixed_ticks=False``): a
+    (slots, chunk) prefill dispatch then a (slots, 1) decode dispatch per
+    tick;
+  * ``mixed``  — the mixed-tick engine: ONE (slots, chunk) dispatch per
+    tick serving prefill and decode lanes together (the chunked
+    block-table kernel).  Timed on a PREFILL-BURST load (heavier Poisson
+    arrivals, so most ticks carry both phases — the regime the fusion
+    targets) against the two-dispatch engine on the identical workload;
+    tokens are asserted identical and the ``dispatches_per_tick == 1``
+    contract is asserted here.  On the padded cpu-fallback path the
+    per-lane chunk columns cost real FLOPs, so the decode-only tail
+    favors the (slots, 1) program — the recorded ``dispatch_path`` keeps
+    that from reading as a kernel regression;
+  * ``dual``   — (``--dual``) the dual-branch (MHA||MLP) engine on the
+    two-program path (its fused Pallas dispatch is the C == 1 decode
+    tick); asserts token identity and gates on the structural
+    no-extra-collectives assertion under explicit TP.
+
+Every engine is warmed up before timing — BOTH jitted programs for the
+two-program engines, the single program for the mixed engine — and the
+dispatch path actually timed (``fused-tpu`` vs ``cpu-fallback``) is
+recorded next to every number so a cold/fallback run can never read as a
+kernel regression.
 
 Standalone:  PYTHONPATH=src python benchmarks/bench_serving.py [--dual]
              [--json] (writes BENCH_serving.json)
@@ -29,6 +47,7 @@ except ImportError:   # plain-script invocation: benchmarks/ itself on path
 
 force_host_devices()
 
+import dataclasses
 import time
 
 import jax
@@ -38,6 +57,11 @@ from repro.configs.base import get_config
 from repro.models import model as M
 from repro.serve.decode import ContinuousBatcher, Request
 from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+
+
+def _dispatch_path():
+    from repro.kernels.ops import _default_use_pallas
+    return "fused-tpu" if _default_use_pallas() else "cpu-fallback"
 
 
 def _workload(vocab, n_requests=12, seed=0, rate=0.5):
@@ -71,37 +95,56 @@ def _drive(submit, step, pending, active_or_queued):
 
 
 def _warmup(engine, mk_req):
-    """Compile the engine's programs outside the timed region (the paged
-    engine has two traces: (B, chunk) prefill and (B, 1) decode)."""
+    """Compile every jitted program the engine's config uses outside the
+    timed region: the warmup request's prompt (40 tokens) exceeds the
+    prefill chunk and it decodes several tokens, so the two-program engine
+    traces BOTH its (B, chunk) and (B, 1) shapes and the mixed engine its
+    single (B, chunk) shape — nothing is ever timed cold."""
     engine.submit(mk_req())
     engine.run()
 
 
+def _lat_percentiles(samples):
+    """(p50, p99) of a sorted-able sample list; (0, 0) when empty."""
+    if not samples:
+        return 0.0, 0.0
+    s = sorted(samples)
+    p50 = s[len(s) // 2]
+    p99 = s[min(len(s) - 1, int(np.ceil(0.99 * len(s))) - 1)]
+    return p50, p99
+
+
 def _run_paged(cfg, params, work, ecfg):
     """Drive one paged-engine run over ``work``; returns (wall seconds,
-    finished requests, warmup-corrected stats)."""
+    finished requests, warmup-corrected stats, per-decode-tick wall ms)."""
     eng = PagedEngine(cfg, params, ecfg)
     _warmup(eng, lambda: ServeRequest(rid=-1, prompt=np.arange(40) % cfg.vocab,
                                       max_new=4))
-    # drop the warmup request from every reported stat, not just the
-    # request list (utilization samples, page peak, call counters)
+    # drop the warmup request from every reported stat (jit stays warm)
     eng.finished.clear()
-    eng._util.clear()
-    eng.allocator.peak_in_use = eng.allocator.in_use
-    eng.decode_calls = eng.preemptions = 0
-    eng.prefill_tokens = eng.decode_tokens = 0
-    pre_prefill_calls = eng.prefill_calls    # jit warm, so keep the counter
+    eng.reset_stats()
 
     def submit(w, tick):
         eng.submit(ServeRequest(rid=w["rid"], prompt=w["prompt"],
                                 max_new=w["max_new"]))
 
+    decode_tick_ms = []
+
+    def step():
+        # a decode lane is waiting iff some active slot has exactly one
+        # pending token; on the two-program path that lane's advance is
+        # head-of-line blocked behind the tick's prefill dispatch
+        had_decode = any(r is not None and len(r.known()) - r.pos == 1
+                         for r in eng.slots)
+        t0 = time.perf_counter()
+        eng.step()
+        if had_decode:
+            decode_tick_ms.append((time.perf_counter() - t0) * 1e3)
+
     dt, _ = _drive(
-        submit, eng.step, list(work),
+        submit, step, list(work),
         lambda: eng.queue or any(s is not None for s in eng.slots))
-    st = eng.stats()
-    st["prefill_calls"] -= pre_prefill_calls
-    return dt, eng.finished, st
+    return dt, eng.finished, eng.stats(), decode_tick_ms
 
 
 def _dual_structural_gate():
@@ -120,7 +163,7 @@ def bench(csv, dual=False):
         remat=False, attn_block_q=64, attn_block_k=128, connection="fal")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     max_seq, slots = 160, 4
-    data = {}
+    data = {"dispatch_path": _dispatch_path()}
 
     # ---- seed engine: contiguous cache, one token per tick ---------------
     work = _workload(cfg.vocab)
@@ -129,6 +172,7 @@ def bench(csv, dual=False):
     _warmup(seed_eng, lambda: Request(rid=-1,
                                       prompt=np.arange(40) % cfg.vocab,
                                       max_new=4))
+    seed_eng.reset_stats()
     seed_done = []
 
     def submit_seed(w, tick):
@@ -142,20 +186,24 @@ def bench(csv, dual=False):
     csv("serving_seed_engine", dt_seed * 1e6,
         f"tok_per_s={toks_seed/dt_seed:.0f};requests={len(work)}")
     data["seed"] = {"tok_per_s": toks_seed / dt_seed,
-                    "requests": len(work)}
+                    "requests": len(work),
+                    "dispatches_per_tick":
+                        seed_eng.stats()["dispatches_per_tick"]}
 
-    # ---- paged engine: chunked batched prefill + paged KV ----------------
+    # ---- paged engine (two-program path): chunked prefill + paged KV -----
     work = _workload(cfg.vocab)
     ecfg = EngineConfig(page_size=16, num_pages=48, slots=slots,
-                        prefill_chunk=32, max_seq=max_seq)
-    dt, done, st = _run_paged(cfg, params, work, ecfg)
+                        prefill_chunk=32, max_seq=max_seq,
+                        mixed_ticks=False)
+    dt, done, st, dec_ms = _run_paged(cfg, params, work, ecfg)
     toks = sum(len(r.generated) for r in done)
     lat_ticks = sorted(r.finish_tick - r.submit_tick for r in done)
-    p50 = lat_ticks[len(lat_ticks) // 2]
-    p99 = lat_ticks[min(len(lat_ticks) - 1,
-                        int(np.ceil(0.99 * len(lat_ticks))) - 1)]
+    p50, p99 = _lat_percentiles(lat_ticks)
+    d50, d99 = _lat_percentiles(dec_ms)
     csv("serving_paged_engine", dt * 1e6,
-        f"tok_per_s={toks/dt:.0f};p50_ticks={p50};p99_ticks={p99}")
+        f"tok_per_s={toks/dt:.0f};p50_ticks={p50};p99_ticks={p99};"
+        f"decode_p50_ms={d50:.1f};decode_p99_ms={d99:.1f};"
+        f"dispatches_per_tick={st['dispatches_per_tick']:.2f}")
     csv("serving_paged_pages", 0,
         f"mean_util={st['mean_page_utilization']:.2f};"
         f"peak={st['pages']['peak_in_use']};"
@@ -167,26 +215,78 @@ def bench(csv, dual=False):
     assert toks == toks_seed, (toks, toks_seed)
     data["paged"] = {"tok_per_s": toks / dt, "p50_ticks": p50,
                      "p99_ticks": p99,
+                     "decode_p50_ms": d50, "decode_p99_ms": d99,
+                     "dispatches_per_tick": st["dispatches_per_tick"],
+                     "mean_occupancy": st["mean_occupancy"],
                      "mean_page_utilization": st["mean_page_utilization"],
                      "preemptions": st["preemptions"]}
+    tok_map = {r.rid: r.generated for r in done}
+
+    # ---- mixed-tick engine: ONE (slots, chunk) dispatch per tick ---------
+    # prefill-burst load: heavier arrivals + a finer chunk keep both phases
+    # live in most ticks — the head-of-line regime the fusion targets; the
+    # two-dispatch engine runs the IDENTICAL workload and config
+    burst = dict(n_requests=16, rate=2.0)
+    ecfg_burst = dataclasses.replace(ecfg, prefill_chunk=8)
+    dt_t, done_t, st_t, dec_ms_t = _run_paged(
+        cfg, params, _workload(cfg.vocab, **burst), ecfg_burst)
+    dt_m, done_m, st_m, dec_ms_m = _run_paged(
+        cfg, params, _workload(cfg.vocab, **burst),
+        dataclasses.replace(ecfg_burst, mixed_ticks=True))
+    toks_t = sum(len(r.generated) for r in done_t)
+    toks_m = sum(len(r.generated) for r in done_m)
+    assert ({r.rid: r.generated for r in done_m}
+            == {r.rid: r.generated for r in done_t}), \
+        "mixed-tick tokens diverged from the two-dispatch engine"
+    assert st_m["dispatches_per_tick"] == 1.0, st_m
+    d50_t, d99_t = _lat_percentiles(dec_ms_t)
+    d50_m, d99_m = _lat_percentiles(dec_ms_m)
+    p50_m, p99_m = _lat_percentiles(
+        sorted(r.finish_tick - r.submit_tick for r in done_m))
+    csv("serving_two_dispatch_under_burst", dt_t * 1e6,
+        f"tok_per_s={toks_t/dt_t:.0f};"
+        f"decode_p50_ms={d50_t:.1f};decode_p99_ms={d99_t:.1f};"
+        f"dispatches_per_tick={st_t['dispatches_per_tick']:.2f}")
+    csv("serving_mixed_tick_engine", dt_m * 1e6,
+        f"tok_per_s={toks_m/dt_m:.0f};"
+        f"decode_p50_ms={d50_m:.1f};decode_p99_ms={d99_m:.1f};"
+        f"dispatches_per_tick={st_m['dispatches_per_tick']:.2f};"
+        f"occupancy={st_m['mean_occupancy']:.2f};"
+        f"mixed_vs_two_dispatch={dt_t/dt_m:.2f};"
+        f"path={data['dispatch_path']}")
+    data["mixed"] = {"tok_per_s": toks_m / dt_m,
+                     "p50_ticks": p50_m, "p99_ticks": p99_m,
+                     "decode_p50_ms": d50_m, "decode_p99_ms": d99_m,
+                     "dispatches_per_tick": st_m["dispatches_per_tick"],
+                     "mean_occupancy": st_m["mean_occupancy"],
+                     "speedup_vs_two_dispatch": dt_t / dt_m,
+                     "preemptions": st_m["preemptions"],
+                     "dispatch_path": data["dispatch_path"],
+                     "workload": {**burst,
+                                  "prefill_chunk": ecfg_burst.prefill_chunk},
+                     "two_dispatch": {
+                         "tok_per_s": toks_t / dt_t,
+                         "decode_p50_ms": d50_t, "decode_p99_ms": d99_t,
+                         "dispatches_per_tick":
+                             st_t["dispatches_per_tick"]}}
 
     if not dual:
         return data
 
     # ---- dual-branch engine: MHA||MLP branch-parallel decode dispatch ----
+    # (two-program path: the fused Pallas dual dispatch is the C == 1
+    # decode tick; _run_paged warms both programs before timing)
     work = _workload(cfg.vocab)
-    import dataclasses
-    dt_d, done_d, _ = _run_paged(cfg, params, work,
-                                 dataclasses.replace(ecfg, dual_branch=True))
+    dt_d, done_d, _, _ = _run_paged(cfg, params, work,
+                                    dataclasses.replace(ecfg,
+                                                        dual_branch=True))
     toks_d = sum(len(r.generated) for r in done_d)
     # the CPU fallback replays the sequential path's exact ops, so tokens
     # are identical request-for-request; the fused TPU kernel's tiled FFN
     # accumulation is only tolerance-close to mlp_apply, where a near-tie
     # argmax may legitimately flip — don't hard-fail there
-    from repro.kernels.ops import _default_use_pallas
-    tok_map, tok_map_d = ({r.rid: r.generated for r in done},
-                          {r.rid: r.generated for r in done_d})
-    if not _default_use_pallas():
+    tok_map_d = {r.rid: r.generated for r in done_d}
+    if data["dispatch_path"] == "cpu-fallback":
         assert tok_map_d == tok_map, \
             "dual-branch tokens diverged from sequential decode"
     elif tok_map_d != tok_map:
@@ -195,10 +295,12 @@ def bench(csv, dual=False):
             f"{sum(tok_map_d[r] != tok_map[r] for r in tok_map)}")
     csv("serving_dual_branch_engine", dt_d * 1e6,
         f"tok_per_s={toks_d/dt_d:.0f};"
-        f"dual_vs_sequential={dt/dt_d:.2f}")
+        f"dual_vs_sequential={dt/dt_d:.2f};"
+        f"path={data['dispatch_path']}")
     data["dual"] = {"tok_per_s": toks_d / dt_d,
                     "sequential_tok_per_s": toks / dt,
-                    "speedup_vs_sequential": dt / dt_d}
+                    "speedup_vs_sequential": dt / dt_d,
+                    "dispatch_path": data["dispatch_path"]}
 
     # structural gate: no extra collectives under explicit TP
     if len(jax.devices()) >= 2:

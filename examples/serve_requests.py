@@ -1,11 +1,17 @@
 """Serving example: the paged continuous-batching engine over a FAL model —
-submits a ragged stream of requests, drains them through fixed batch slots
-with chunked batched prefill + paged KV cache, verifies batched outputs
-match lone-request decoding, and re-serves the stream with dual-branch
-(MHA||MLP) decode: under ``fal``/``parallel`` the MLP input never depends on
-the block's own attention, so ``EngineConfig(dual_branch=True)`` issues each
-steady-state block's FFN off the cached per-slot first-attention signal
-concurrently with the paged KV gather — same tokens, overlapped branches.
+submits a ragged stream of requests and drains them through fixed batch
+slots with ONE mixed (slots, prefill_chunk) dispatch per engine tick
+(``EngineConfig.mixed_ticks``, the default): prefilling lanes advance up to
+a chunk of prompt tokens while decoding lanes advance one sampled token in
+the SAME jitted call, so decode is never head-of-line blocked behind a
+prefill dispatch.  The example verifies batched outputs match lone-request
+decoding, compares against the retired two-program engine
+(``mixed_ticks=False``: a prefill dispatch then a decode dispatch per
+tick), and re-serves the stream with dual-branch (MHA||MLP) decode: under
+``fal``/``parallel`` the MLP input never depends on the block's own
+attention, so ``EngineConfig(dual_branch=True)`` issues each steady-state
+block's FFN off the cached per-slot first-attention signal concurrently
+with the paged KV gather — same tokens, overlapped branches.
 
 Run:  PYTHONPATH=src python examples/serve_requests.py
 """
@@ -25,7 +31,8 @@ rng = np.random.default_rng(42)
 
 # --- submit 10 ragged requests through 4 slots -----------------------------
 # the engine stores a typed ExecutionPlan (phase is pinned to 'paged' for
-# every jitted dispatch it compiles); single_device() = no mesh, no TP
+# every jitted dispatch it compiles); single_device() = no mesh, no TP.
+# mixed_ticks=True (default): the engine compiles exactly ONE program
 plan = ExecutionPlan.single_device()
 ecfg = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
                     max_seq=128)
@@ -39,8 +46,9 @@ dt = time.time() - t0
 total = sum(len(r.generated) for r in done)
 st = engine.stats()
 print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
-      f"({total/dt:.0f} tok/s; {st['prefill_calls']} prefill + "
-      f"{st['decode_calls']} decode dispatches, "
+      f"({total/dt:.0f} tok/s; {st['dispatches']} dispatches in "
+      f"{st['ticks']} ticks = {st['dispatches_per_tick']:.2f}/tick, "
+      f"occupancy {st['mean_occupancy']:.2f}, "
       f"peak pages {st['pages']['peak_in_use']}/{st['pages']['capacity']})")
 for r in sorted(done, key=lambda r: r.rid)[:3]:
     print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
@@ -56,15 +64,37 @@ ref = lone.run()[0].generated
 assert ref == probe.generated, (ref, probe.generated)
 print("continuous batching == lone decoding ✓")
 
+# --- mixed tick == retired two-program engine ------------------------------
+# one release of back-compat: mixed_ticks=False compiles the (slots, chunk)
+# prefill and (slots, 1) decode programs and issues up to two dispatches
+# per tick; token streams must be identical
+two = PagedEngine(cfg, params,
+                  EngineConfig(page_size=8, num_pages=48, slots=4,
+                               prefill_chunk=8, max_seq=128,
+                               mixed_ticks=False), plan=plan)
+for i, p in enumerate(prompts):
+    two.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
+done_two = two.run()
+assert ({r.rid: r.generated for r in done_two}
+        == {r.rid: r.generated for r in done})
+st2 = two.stats()
+print(f"mixed tick == two-dispatch engine ✓ "
+      f"({st['dispatches_per_tick']:.2f} vs "
+      f"{st2['dispatches_per_tick']:.2f} dispatches/tick)")
+
 # --- dual-branch decode: MHA||MLP off the cached FAL signal ----------------
 # valid only for fal/parallel-family connections (ExecutionPlan.validate
 # rejects preln/falplus loudly); on the CPU dispatch path logits — and
 # therefore tokens — are bit-identical to the sequential engine (the fused
-# TPU kernel is tolerance-close), the win is branch overlap
+# TPU kernel is tolerance-close), the win is branch overlap.  The fused
+# C == 1 dual Pallas dispatch only exists on the two-program path's decode
+# tick, so this engine pins mixed_ticks=False (under mixed ticks the
+# branches still overlap, at op level)
 dual = PagedEngine(cfg, params,
                    EngineConfig(page_size=8, num_pages=48, slots=4,
                                 prefill_chunk=8, max_seq=128,
-                                dual_branch=True), plan=plan)
+                                dual_branch=True, mixed_ticks=False),
+                   plan=plan)
 for i, p in enumerate(prompts):
     dual.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
 t0 = time.time()

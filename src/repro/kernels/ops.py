@@ -51,6 +51,26 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
                                     seq_lens)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
+                          use_pallas=None, interpret=False):
+    """Chunked paged attention (the mixed-tick serving kernel): q (B,C,H,D)
+    chunks at per-lane positions ``pos`` (first ``n_valid`` rows of each
+    lane valid, causal within the chunk) against (P,page,Hkv,D*) pools
+    addressed through (B,T) block tables.  One dispatch serves lanes at ANY
+    phase — prefilling lanes ride with n_valid up to C, decoding lanes with
+    n_valid == 1; rows past a lane's ``n_valid`` are finite but meaningless
+    and must not be read.  Pallas kernel on TPU; gather-based jnp oracle on
+    CPU (identical numerics)."""
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_chunk_attention(q, k_pages, v_pages, block_tables,
+                                         pos, n_valid, interpret=interpret)
+    return _ref.paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
+                                          pos, n_valid)
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
                                              "interpret"))
 def dual_branch_decode(q, k_pages, v_pages, block_tables, seq_lens, mlp_in,

@@ -1,20 +1,29 @@
-"""Pallas TPU paged-attention decode kernel (GQA, block-table gather).
+"""Pallas TPU paged-attention kernels (GQA, block-table gather).
 
-One query token per request attends to its KV history stored in fixed-size
-pages scattered through (num_pages, page_size, Hkv, D) pools.  The block
-table and per-request sequence lengths ride in as scalar-prefetch operands
-(``PrefetchScalarGridSpec``): the K/V BlockSpec index maps read the block
-table directly, so each grid step DMAs exactly one physical page into VMEM —
-no gathered (B, T*page) copy is ever materialised in HBM.
+``paged_decode_attention`` — one query token per request attends to its KV
+history stored in fixed-size pages scattered through
+(num_pages, page_size, Hkv, D) pools.  ``paged_chunk_attention`` — the
+C >= 1 generalisation that backs the serving engine's MIXED tick: every
+lane carries a C-token query chunk at its own position (per-lane ``pos`` /
+``n_valid`` vectors), causal within the chunk, so prefilling lanes
+(n_valid up to C) and decoding lanes (n_valid == 1) ride in ONE dispatch.
+
+In both kernels the block table and per-request positions ride in as
+scalar-prefetch operands (``PrefetchScalarGridSpec``): the K/V BlockSpec
+index maps read the block table directly, so each grid step DMAs exactly
+one physical page into VMEM — no gathered (B, T*page) copy is ever
+materialised in HBM.
 
 Grid: (B, Hkv, T) with T sequential (TPU grids execute in order); the G
-query heads sharing a kv head are processed together as a (G, D) tile so
-the page matmuls hit the MXU.  Online-softmax running max/denominator/
-accumulator live in VMEM scratch, carried across the T page steps; pages
-whose first slot is at/beyond seq_len are skipped with ``pl.when``.
+query heads sharing a kv head are processed together as a (G, D) tile —
+(C*G, D) for the chunked kernel — so the page matmuls hit the MXU.
+Online-softmax running max/denominator/accumulator live in VMEM scratch,
+carried across the T page steps; pages whose first slot is at/beyond the
+lane's live history are skipped with ``pl.when``.
 
 Target: TPU.  Validated with ``interpret=True`` on CPU against
-``repro.kernels.ref.paged_attention_ref``.
+``repro.kernels.ref.paged_attention_ref`` /
+``ref.paged_chunk_attention_ref``.
 """
 from __future__ import annotations
 
@@ -116,3 +125,114 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
       qg, kt, vt)
     return out.reshape(B, H, Dv)
+
+
+def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_scr, l_scr, acc_scr, *, scale, page_size, G):
+    b = pl.program_id(0)
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+    seq_len = pos + nv_ref[b]         # this lane's live history (keys < it)
+    k_start = it * page_size          # logical position of this page's slot 0
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (C*G, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (C*G, page)
+        # row r is chunk lane c = r // G at logical position pos + c: causal
+        # within the chunk (k_pos <= q_pos) over live keys (k_pos < seq_len)
+        q_pos = pos + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((k_pos <= q_pos) & (k_pos < seq_len), s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (C*G,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        # rows with no visible key yet keep m == NEG_INF, where s - m == 0
+        # would count every masked key: zero those weights explicitly so the
+        # no-visible-key rows emit 0 (the oracle's convention)
+        p = jnp.where(m_cur[:, None] > NEG_INF / 2, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # skip pages entirely past the lane's live history
+    pl.when(k_start < seq_len)(_body)
+
+    @pl.when(it == nt - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
+                          scale=None, interpret=False):
+    """Chunked paged attention — the mixed-tick serving kernel.
+
+    q: (B, C, H, D) — lane b's C query tokens at logical positions
+    ``pos[b] .. pos[b] + C - 1``, first ``n_valid[b]`` valid (their K/V are
+    already scattered into the pools); k_pages/v_pages: (P, page, Hkv, D*);
+    block_tables: (B, T) int32; pos/n_valid: (B,) int32 -> (B, C, H, Dv).
+    Causal within the chunk.  Rows past ``n_valid`` are finite but
+    MEANINGLESS (they attend whatever live history the lane has; rows with
+    no visible key emit 0) — callers must only read each lane's first
+    ``n_valid`` rows; the serving engine gathers the last valid one.
+    """
+    B, C, H, D = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    G = H // Hkv
+    T = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+
+    # (B, C, Hkv, G, D) -> (B, Hkv, C*G, D): one MXU tile per (lane, kv head)
+    qg = q.reshape(B, C, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hkv, C * G, D)
+    kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, C * G, D),
+                         lambda b, h, t, bt, ps, nv: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, Dv),
+                         lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C * G, Dv),
+                               lambda b, h, t, bt, ps, nv: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G, Dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_chunk_kernel, scale=scale,
+                               page_size=page, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, C * G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      n_valid.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, Hkv, C, G, Dv).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, C, H, Dv)

@@ -50,6 +50,46 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
     return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
 
 
+def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, pos,
+                              n_valid, *, scale=None):
+    """Chunked paged-attention oracle (gather-based): C >= 1 query tokens per
+    lane against block-table pages, causal within the chunk.
+
+    q: (B, C, H, D) — lane b's queries sit at logical positions
+    ``pos[b] .. pos[b] + C - 1``, of which the first ``n_valid[b]`` are
+    valid (the chunk's own K/V have already been scattered into the pools);
+    k_pages/v_pages: (P, page_size, Hkv, D*);  block_tables: (B, T) int32;
+    pos/n_valid: (B,) int32.  Returns (B, C, H, Dv).
+
+    A key at gathered index j is visible to chunk lane c iff
+    ``j <= pos + c`` (causality, incl. within the chunk) and
+    ``j < pos + n_valid`` (this lane's live history).  Rows past
+    ``n_valid`` are finite but MEANINGLESS — they attend the lane's live
+    history under the same mask, and rows with no visible key return 0 —
+    the identical convention to the Pallas kernel, so the two agree on
+    every row; callers must only read the first ``n_valid`` rows.
+    """
+    B, C, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    Dv = v_pages.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, -1, Hkv, D)
+    v = v_pages[block_tables].reshape(B, -1, Hkv, Dv)
+    qg = q.reshape(B, C, Hkv, G, D)
+    s = jnp.einsum("bchgd,bkhd->bhgck", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(k.shape[1])[None, None]                  # (1, 1, Sk)
+    q_pos = pos[:, None] + jnp.arange(C)[None]                  # (B, C)
+    seq_len = (pos + n_valid)[:, None, None]
+    mask = (k_pos <= q_pos[:, :, None]) & (k_pos < seq_len)     # (B, C, Sk)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgck,bkhd->bchgd", p, v.astype(jnp.float32))
+    return o.reshape(B, C, H, Dv).astype(q.dtype)
+
+
 def ln_add_ref(x, a1n, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
     xf = x.astype(jnp.float32)
     if kind == "layernorm":

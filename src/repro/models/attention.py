@@ -184,19 +184,26 @@ def _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables, pos, n_valid):
 def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
                     window=0):
     """Chunked decode/prefill against a paged cache.  x: (B, C, D) with C >= 1
-    (C == 1 is a decode tick).  Returns (out (B,C,D), new_cache)."""
+    (C == 1 is a decode-only tick; C > 1 serves lanes at ANY phase — per-lane
+    ``pos``/``n_valid`` let prefilling lanes advance up to C positions while
+    decoding lanes advance 1 in the same dispatch).  Returns
+    (out (B,C,D), new_cache)."""
     B, C = x.shape[:2]
     q, kc, vc, positions = _gqa_paged_qkv_scatter(p, cfg, x, cache,
                                                   block_tables, pos, n_valid)
-    if C == 1 and cfg.attn_softcap == 0.0 \
-            and isinstance(window, int) and window == 0:
-        # single-token full-attention tick: the paged-attention kernel path
-        # (Pallas on TPU, gather-free ref on CPU) — avoids materialising the
-        # gathered (B, T*page) copies below
+    if cfg.attn_softcap == 0.0 and isinstance(window, int) and window == 0:
+        # full-attention tick: the block-table kernel paths (Pallas on TPU,
+        # gather-based ref on CPU) — the TPU kernels DMA pages directly so
+        # no gathered (B, T*page) copy is ever materialised in HBM
         from repro.kernels import ops
-        o = ops.paged_decode_attention(q[:, 0], kc, vc, block_tables,
-                                       pos + 1)[:, None]
+        if C == 1:
+            o = ops.paged_decode_attention(q[:, 0], kc, vc, block_tables,
+                                           pos + 1)[:, None]
+        else:
+            o = ops.paged_chunk_attention(q, kc, vc, block_tables, pos,
+                                          n_valid)
     else:
+        # sliding-window / softcapped layers (gemma2): masked gather path
         o = chunk_attention(q, paged_gather(kc, block_tables),
                             paged_gather(vc, block_tables), positions,
                             window=window, cap=cfg.attn_softcap)

@@ -364,13 +364,19 @@ def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype):
     }
 
 
-def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan):
+def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan,
+                          want="logits"):
     """Chunked paged tick: C >= 1 tokens per request against page pools.
 
-    batch: tokens (B, C), pos (B,) first logical position, n_valid (B,)
-    valid tokens per request (invalid lanes -> scratch page), block_tables
-    (B, T).  Returns (logits (B, C, V), new_cache).  C == 1 is a decode
-    tick; C > 1 a chunked-prefill tick — one jitted program each.
+    batch: tokens (B, C), pos (B,) PER-LANE first logical position, n_valid
+    (B,) valid tokens per lane (invalid lanes -> scratch page),
+    block_tables (B, T).  Returns (logits (B, C, V), new_cache).  Lanes are
+    phase-independent: a C > 1 tick serves any mix of prefilling lanes
+    (n_valid up to C) and decoding lanes (n_valid == 1) — the serving
+    engine's MIXED tick compiles exactly this one program; C == 1 is the
+    retired decode-only tick shape.  Full attention runs the block-table
+    kernels (``kernels.ops.paged_chunk_attention`` for C > 1,
+    ``paged_decode_attention`` for C == 1) with no gathered HBM copy.
 
     With ``plan.dual_branch`` (fal/parallel-family connections only,
     ``plan.validate``) the steady-state blocks run the MHA||MLP
@@ -425,6 +431,12 @@ def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan):
                                          block_tables=bt, n_valid=n_valid)
     new_caches["blocks"] = blocks_new
 
+    if want == "hidden":
+        # serving engines consume ONE row of logits per lane (the last
+        # valid one): skip the (B, C, V) head here and let the caller run
+        # ``lm_head`` on the gathered lane — at C == prefill_chunk that is
+        # 1/C of the tick's dominant matmul
+        return x, new_caches
     logits = _logits(p, cfg, x)
     return logits, new_caches
 def _mamba_block_init(key, cfg):
@@ -807,21 +819,35 @@ PAGED_FAMILIES = ("dense", "moe", "vlm")
 def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16"):
     """Paged-KV cache for the decoder family: (num_pages, page_size, ...)
     pools per layer + a per-slot FAL-signal buffer.  Page 0 is scratch
-    (see attention.paged_scatter)."""
+    (see attention.paged_scatter).  Slots are phase-independent — each
+    lane's position/advance rides in per-lane ``pos``/``n_valid`` vectors,
+    so one cache serves mixed prefill/decode ticks; the per-slot ``a1_sig``
+    buffer is refreshed by block 0 at each lane's own last valid position
+    (held for lanes sitting a tick out)."""
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"paged KV cache: decoder family only, got {cfg.family}")
     return _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype)
 
 
-def paged_decode_step(params, cfg, batch, cache, plan=None):
+def paged_decode_step(params, cfg, batch, cache, plan=None, want="logits"):
     """Chunked paged tick -> (logits (B,C,V), new_cache).  See
-    ``_decoder_paged_decode`` for the batch contract."""
+    ``_decoder_paged_decode`` for the batch contract.  ``want='hidden'``
+    returns the pre-head hidden states (B, C, D) instead of logits — the
+    serving engines gather each lane's last valid row and run ``lm_head``
+    on (B, 1, D), paying 1/C of the head matmul per tick."""
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"paged decode: decoder family only, got {cfg.family}")
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED).validate(cfg)
-    return _decoder_paged_decode(params, cfg, batch, cache, plan)
+    return _decoder_paged_decode(params, cfg, batch, cache, plan, want=want)
+
+
+def lm_head(params, cfg, x):
+    """Final norm + (tied) unembedding: hidden (B, S, D) -> logits
+    (B, S, V).  The tail ``paged_decode_step(want='hidden')`` callers run
+    on their gathered lanes."""
+    return _logits(params, cfg, x)
 
 
 def _mtp_loss(p, cfg, batch, hidden):

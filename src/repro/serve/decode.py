@@ -77,7 +77,15 @@ class Request:
 class ContinuousBatcher:
     """Slot-based continuous batching: fixed B slots; finished requests are
     replaced by queued ones.  Per-slot positions => the per-request ``pos``
-    vector the decode kernels consume."""
+    vector the decode kernels consume.
+
+    The seed engine is single-program too — ONE (B, 1) dispatch per tick —
+    but every lane advances exactly one token, so prompts prefill one
+    dispatch per token.  The paged engine's mixed tick
+    (``scheduler.EngineConfig.mixed_ticks``) keeps the one-dispatch-per-tick
+    property while letting prefilling lanes advance a whole chunk;
+    ``stats()`` reports the same ``dispatches_per_tick`` / occupancy fields
+    on both engines so the comparison is direct."""
 
     def __init__(self, cfg, params, batch_slots: int, max_seq: int,
                  cache_dtype="float32", plan=None, dual_branch=False):
@@ -91,6 +99,9 @@ class ContinuousBatcher:
         self.serve_step = jax.jit(make_serve_step(cfg, self.plan))
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
+        self.ticks = 0
+        self.dispatches = 0
+        self._occ = []                 # active lanes / slots, per dispatch
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -103,6 +114,9 @@ class ContinuousBatcher:
     def step(self):
         """One engine tick: feed each active slot its next token."""
         self._fill_slots()
+        self.ticks += 1
+        self.dispatches += 1
+        self._occ.append(sum(r is not None for r in self.slots) / self.B)
         toks = np.zeros((self.B, 1), np.int32)
         pos = np.zeros((self.B,), np.int32)
         for i, r in enumerate(self.slots):
@@ -134,3 +148,15 @@ class ContinuousBatcher:
         while any(s is not None for s in self.slots) or self.queue:
             done += self.step()
         return done
+
+    def reset_stats(self):
+        self.ticks = self.dispatches = 0
+        self._occ.clear()
+
+    def stats(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "dispatches": self.dispatches,
+            "dispatches_per_tick": self.dispatches / max(self.ticks, 1),
+            "mean_occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
+        }

@@ -1,77 +1,22 @@
-"""Chunked **batched** prefill for the paged engine.
-
-The seed engine teacher-forced prompts one token per engine tick — one jit
-dispatch per prompt token, with every decode-phase request stalled behind
-it.  Here a prefill tick jits ONE multi-token forward over a (B, chunk)
-window: every prefilling request advances up to ``chunk`` positions per
-dispatch, and since a decode tick is the same program at chunk == 1
-(``model.paged_decode_step``), the engine compiles exactly two XLA programs
-regardless of prompt raggedness — (B, chunk) and (B, 1).
-
-Requests with fewer remaining tokens than the chunk width ride along with
-``n_valid < chunk``; their padded lanes scatter to the scratch page and
-their padded logits are never read.
+"""DEPRECATED shim (one release): the chunked-prefill program moved into
+``serve/scheduler.py`` when prefill and decode were collapsed into the ONE
+mixed-tick dispatch (``EngineConfig.mixed_ticks``) — a single jitted
+(slots, prefill_chunk) program serves lanes at any phase, so a separate
+prefill module no longer exists.  Import ``make_paged_step`` /
+``pack_chunks`` / ``last_valid_logits`` from ``repro.serve.scheduler``.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
-from repro.core.plan import ExecutionPlan, Phase
-from repro.models import model as M
-from repro.serve import sampling as SP
+from repro.serve.scheduler import (  # noqa: F401
+    last_valid_logits,
+    make_paged_step,
+    pack_chunks,
+)
 
-
-def make_paged_step(cfg, plan=None):
-    """Jitted paged tick: (params, cache, tokens (B,C), pos (B,),
-    n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
-    sample_pos) -> (logits (B,C,V), next_tokens (B,), new_cache).
-
-    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the primary (and only
-    non-deprecated) way to configure the dispatch; its phase is pinned to
-    paged here.  ``plan.dual_branch`` selects the MHA||MLP branch-parallel
-    block for the steady-state layers (fal/parallel-family connections;
-    validated), overlapping each block's paged KV gather with its FFN off
-    the cached per-slot first-attention signal.  One returned callable
-    serves both engine phases: call it with C == chunk for prefill ticks
-    and C == 1 for decode ticks (two traces, cached by shape).  Sampling is
-    fused into the program (one dispatch per tick) and the cache buffers
-    are donated, so page pools update in place instead of being copied
-    every tick.
-    """
-    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
-    plan.validate(cfg)
-
-    def step(params, cache, tokens, pos, n_valid, block_tables,
-             temps, top_ks, top_ps, seeds, sample_pos):
-        batch = {"tokens": tokens, "pos": pos, "n_valid": n_valid,
-                 "block_tables": block_tables}
-        logits, new_cache = M.paged_decode_step(params, cfg, batch, cache,
-                                                plan)
-        nxt = jax.vmap(SP.sample_one)(
-            last_valid_logits(logits, n_valid), temps, top_ks, top_ps,
-            seeds, sample_pos)
-        return logits, nxt, new_cache
-
-    return jax.jit(step, donate_argnums=(1,))
-
-
-def last_valid_logits(logits, n_valid):
-    """(B, C, V), (B,) -> (B, V): each request's logits at its last valid
-    chunk lane (lane 0 for requests that sat out the tick)."""
-    last = jnp.clip(n_valid - 1, 0, logits.shape[1] - 1)
-    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
-
-
-def pack_chunks(token_lists, chunk, slots):
-    """Host-side chunk packing: per-slot lists of pending context tokens ->
-    (tokens (slots, chunk), n_valid (slots,)) numpy arrays.  Empty lists
-    (decode-phase or idle slots) get n_valid == 0."""
-    toks = np.zeros((slots, chunk), np.int32)
-    n_valid = np.zeros((slots,), np.int32)
-    for i, lst in enumerate(token_lists):
-        n = min(len(lst), chunk)
-        toks[i, :n] = lst[:n]
-        n_valid[i] = n
-    return toks, n_valid
+warnings.warn(
+    "repro.serve.prefill is deprecated: the chunked-prefill program is the "
+    "mixed-tick program in repro.serve.scheduler (make_paged_step); this "
+    "shim will be removed next release",
+    DeprecationWarning, stacklevel=2)

@@ -6,10 +6,20 @@ engine with:
   * admission control — a request enters a slot only when the page pool can
     cover its context (policy 'prompt': prompt + 1 token; 'full': prompt +
     max_new, no-preemption reservation);
-  * chunked batched prefill — prefilling slots advance up to
-    ``prefill_chunk`` positions per jit dispatch (serve/prefill.py);
-  * per-request seeded sampling (serve/sampling.py) batched into one
-    dispatch per engine call;
+  * MIXED ticks (``EngineConfig.mixed_ticks``, the default) — the engine
+    compiles exactly ONE jitted (slots, prefill_chunk) program
+    (``make_paged_step``) and issues ONE dispatch per tick that serves lanes
+    at ANY phase: prefilling lanes advance up to ``prefill_chunk`` prompt
+    tokens while decoding lanes advance 1 sampled token in the SAME call
+    (per-lane ``pos``/``n_valid`` vectors mask the rest; the chunked
+    block-table kernel ``kernels.ops.paged_chunk_attention`` serves the
+    attention).  Decode lanes are never head-of-line blocked behind a
+    prefill dispatch, and per-tick dispatch overhead is paid once;
+  * the retired two-program path (``mixed_ticks=False``, one release) —
+    a (slots, prefill_chunk) prefill call then a (slots, 1) decode call
+    per tick, two jitted programs;
+  * per-request seeded sampling (serve/sampling.py) fused into the tick's
+    dispatch;
   * preemption by page pressure — when a slot can't grow its block table,
     the youngest other active request is evicted: its pages are released and
     it is requeued (front).  On re-admission it re-prefills prompt +
@@ -21,24 +31,98 @@ engine with:
     connections the steady-state blocks issue the MLP branch off the cached
     per-slot FAL signal concurrently with the paged attention gather
     (MHA||MLP, the paper's inference-side claim); bit-identical tokens.
+    The C == 1 fused Pallas dual dispatch only exists on the two-program
+    path's decode tick; under mixed ticks the branches overlap at op level.
 
 The oldest active request can always claim pages from younger ones, so the
 engine makes progress whenever any single request fits the pool; requests
 that can never fit are rejected instead of deadlocking the queue.
+
+``stats()`` reports ``dispatches_per_tick`` and ``mean_occupancy`` (active
+lanes / slots per dispatch) so the mixed-tick fusion is observable.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
-from repro.serve import prefill as PF
 from repro.serve import sampling as SP
 from repro.serve.paged_cache import BlockTable, PageAllocator, pages_needed
+
+
+# --------------------------------------------------------------------------- #
+# the engine's ONE jitted program
+# --------------------------------------------------------------------------- #
+def make_paged_step(cfg, plan=None):
+    """Jitted paged tick: (params, cache, tokens (B,C), pos (B,),
+    n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
+    sample_pos) -> (last_logits (B,V), next_tokens (B,), new_cache).
+
+    The engine consumes exactly one row of logits per lane, so the program
+    runs the blocks to hidden states, gathers each lane's LAST VALID row
+    and applies the LM head to the (B, 1, D) gather — 1/C of the tick's
+    dominant matmul compared to a full (B, C, V) head.
+
+    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the primary (and only
+    non-deprecated) way to configure the dispatch; its phase is pinned to
+    paged here.  ``plan.dual_branch`` selects the MHA||MLP branch-parallel
+    block for the steady-state layers (fal/parallel-family connections;
+    validated), overlapping each block's paged KV gather with its FFN off
+    the cached per-slot first-attention signal.  The returned callable is
+    phase-agnostic per LANE: lane b advances ``n_valid[b]`` tokens from its
+    own position ``pos[b]`` — a mixed tick calls it once at C ==
+    prefill_chunk with prefilling lanes at n_valid up to C and decoding
+    lanes at n_valid == 1 (ONE trace, ONE dispatch per tick); the legacy
+    two-program engine calls it at C == chunk then C == 1 (two traces,
+    cached by shape).  Sampling is fused into the program (no extra
+    dispatch) and the cache buffers are donated, so page pools update in
+    place instead of being copied every tick.
+    """
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
+    plan.validate(cfg)
+
+    def step(params, cache, tokens, pos, n_valid, block_tables,
+             temps, top_ks, top_ps, seeds, sample_pos):
+        batch = {"tokens": tokens, "pos": pos, "n_valid": n_valid,
+                 "block_tables": block_tables}
+        hidden, new_cache = M.paged_decode_step(params, cfg, batch, cache,
+                                                plan, want="hidden")
+        h_last = last_valid_logits(hidden, n_valid)            # (B, D)
+        logits = M.lm_head(params, cfg, h_last[:, None])[:, 0]  # (B, V)
+        nxt = jax.vmap(SP.sample_one)(logits, temps, top_ks, top_ps,
+                                      seeds, sample_pos)
+        return logits, nxt, new_cache
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def last_valid_logits(logits, n_valid):
+    """(B, C, *), (B,) -> (B, *): each request's trailing-axis row at its
+    last valid chunk lane (lane 0 for requests that sat out the tick).
+    Shape-generic over the trailing axis — the engine's program applies it
+    to hidden states before the LM head."""
+    last = jnp.clip(n_valid - 1, 0, logits.shape[1] - 1)
+    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+
+
+def pack_chunks(token_lists, chunk, slots):
+    """Host-side chunk packing: per-slot lists of pending context tokens ->
+    (tokens (slots, chunk), n_valid (slots,)) numpy arrays.  Empty lists
+    (idle slots) get n_valid == 0; decode-phase lanes carry exactly one
+    token."""
+    toks = np.zeros((slots, chunk), np.int32)
+    n_valid = np.zeros((slots,), np.int32)
+    for i, lst in enumerate(token_lists):
+        n = min(len(lst), chunk)
+        toks[i, :n] = lst[:n]
+        n_valid[i] = n
+    return toks, n_valid
 
 
 @dataclasses.dataclass
@@ -66,7 +150,7 @@ class EngineConfig:
     """Paged-engine knobs (see ROADMAP.md 'Serving')."""
     page_size: int = 16
     num_pages: int = 64                # pool size incl. scratch page 0
-    slots: int = 4                     # concurrent batch slots
+    slots: int = 4                     # concurrent batch lanes
     prefill_chunk: int = 16            # tokens per prefill dispatch
     max_seq: int = 256                 # per-request context cap
     admission: str = "prompt"          # 'prompt' | 'full'
@@ -78,6 +162,10 @@ class EngineConfig:
     # is tolerance-close); the win is overlap of the paged KV gather with
     # the FFN matmuls.
     dual_branch: bool = False
+    # ONE mixed (slots, prefill_chunk) dispatch per tick serving lanes at
+    # any phase (the default).  False keeps the retired two-program
+    # prefill-then-decode tick for one release.
+    mixed_ticks: bool = True
 
 
 class PagedEngine:
@@ -107,7 +195,7 @@ class PagedEngine:
         self.cache = M.init_paged_cache(
             cfg, engine_cfg.num_pages, engine_cfg.page_size,
             engine_cfg.slots, engine_cfg.cache_dtype)
-        self.step_fn = PF.make_paged_step(cfg, self.plan)
+        self.step_fn = make_paged_step(cfg, self.plan)
         self.allocator = PageAllocator(engine_cfg.num_pages,
                                        engine_cfg.page_size)
         self.tables = [BlockTable(self.allocator, self.max_blocks)
@@ -116,11 +204,14 @@ class PagedEngine:
         self.queue: List[ServeRequest] = []
         self.finished: List[ServeRequest] = []
         self.ticks = 0
-        self.prefill_calls = self.decode_calls = 0
+        self.prefill_calls = self.decode_calls = self.mixed_calls = 0
+        self.dispatches = 0
+        self.dispatch_ticks = 0        # ticks that issued >= 1 dispatch
         self.prefill_tokens = self.decode_tokens = 0
         self.preemptions = self.rejected = 0
         self._arrival = 0
         self._util = []
+        self._occ = []                 # active lanes / slots, per dispatch
 
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest):
@@ -221,12 +312,15 @@ class PagedEngine:
     def _run_call(self, ids: List[int], chunk: int):
         """One jitted engine call (forward + fused sampling) over the given
         participating slots; consume samples for every request whose context
-        completed this call."""
+        completed this call.  Lanes may be in DIFFERENT phases: each lane
+        advances min(chunk, its remaining context) tokens."""
         B = self.ecfg.slots
+        self.dispatches += 1
+        self._occ.append(len(ids) / B)
         lists = [self.slots[i].known()[self.slots[i].pos:
                                        self.slots[i].pos + chunk]
                  if i in ids else [] for i in range(B)]
-        toks, n_valid = PF.pack_chunks(lists, chunk, B)
+        toks, n_valid = pack_chunks(lists, chunk, B)
         pos = np.asarray([r.pos if r else 0 for r in self.slots], np.int32)
         bt = np.stack([t.as_row() for t in self.tables])
         temps = np.zeros((B,), np.float32)
@@ -247,7 +341,13 @@ class PagedEngine:
             jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds),
             jnp.asarray(poss))
         for i in ids:
-            self.slots[i].pos += int(n_valid[i])
+            r = self.slots[i]
+            adv = int(n_valid[i])
+            if len(r.known()) - r.pos == 1:
+                self.decode_tokens += adv
+            else:
+                self.prefill_tokens += adv
+            r.pos += adv
         need = [i for i in ids
                 if self.slots[i].pos == len(self.slots[i].known())]
         if need:
@@ -259,14 +359,43 @@ class PagedEngine:
                     self._finish(i)
                 elif len(r.known()) >= self.ecfg.max_seq:
                     self._finish(i, truncated=True)
-        return int(n_valid.sum())
 
     # ------------------------------------------------------------------ #
     def step(self):
-        """One engine tick: admit -> chunked prefill call -> decode call."""
+        """One engine tick: admit, then ONE mixed dispatch serving every
+        active lane at its own phase (``mixed_ticks``), or the retired
+        chunked-prefill-call-then-decode-call pair."""
         self.ticks += 1
         self._admit()
+        d0 = self.dispatches
+        if self.ecfg.mixed_ticks:
+            self._step_mixed()
+        else:
+            self._step_two_dispatch()
+        if self.dispatches > d0:
+            self.dispatch_ticks += 1
+        self._util.append(self.allocator.stats()["utilization"])
 
+    def _step_mixed(self):
+        """ONE (slots, prefill_chunk) dispatch: prefilling lanes advance up
+        to ``prefill_chunk`` positions, decoding lanes advance 1, in the
+        same jitted call."""
+        chunk = self.ecfg.prefill_chunk
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            feed = min(chunk, len(r.known()) - r.pos)
+            if not self._ensure(i, r.pos + feed):
+                pass                          # slot preempted/truncated
+        ids = [i for i, r in enumerate(self.slots) if r is not None]
+        if ids:
+            self.mixed_calls += 1
+            self._run_call(ids, chunk)
+
+    def _step_two_dispatch(self):
+        """Retired path (one release, ``mixed_ticks=False``): a chunked
+        prefill call then a decode call — decode lanes sit idle during the
+        prefill dispatch and vice versa."""
         def remaining(r):
             return len(r.known()) - r.pos
 
@@ -281,7 +410,7 @@ class PagedEngine:
                if r is not None and remaining(r) > 1]
         if pre:
             self.prefill_calls += 1
-            self.prefill_tokens += self._run_call(pre, self.ecfg.prefill_chunk)
+            self._run_call(pre, self.ecfg.prefill_chunk)
 
         dec = [i for i, r in enumerate(self.slots)
                if r is not None and remaining(r) == 1]
@@ -292,9 +421,7 @@ class PagedEngine:
                if r is not None and remaining(r) == 1]
         if dec:
             self.decode_calls += 1
-            self.decode_tokens += self._run_call(dec, 1)
-
-        self._util.append(self.allocator.stats()["utilization"])
+            self._run_call(dec, 1)
 
     def run(self, max_ticks: Optional[int] = None) -> List[ServeRequest]:
         while any(s is not None for s in self.slots) or self.queue:
@@ -304,6 +431,18 @@ class PagedEngine:
         return self.finished
 
     # ------------------------------------------------------------------ #
+    def reset_stats(self):
+        """Zero every counter/sample while keeping compiled programs, live
+        requests and page state (benchmarks call this after warmup)."""
+        self.ticks = 0
+        self.prefill_calls = self.decode_calls = self.mixed_calls = 0
+        self.dispatches = self.dispatch_ticks = 0
+        self.prefill_tokens = self.decode_tokens = 0
+        self.preemptions = self.rejected = 0
+        self._util.clear()
+        self._occ.clear()
+        self.allocator.peak_in_use = self.allocator.in_use
+
     def stats(self) -> dict:
         frag = sum(self.tables[i].internal_fragmentation(self.slots[i].pos)
                    for i in range(self.ecfg.slots)
@@ -312,6 +451,18 @@ class PagedEngine:
             "ticks": self.ticks,
             "prefill_calls": self.prefill_calls,
             "decode_calls": self.decode_calls,
+            "mixed_calls": self.mixed_calls,
+            "dispatches": self.dispatches,
+            "dispatch_ticks": self.dispatch_ticks,
+            # the tentpole metric, over ticks that issued any dispatch (a
+            # tick whose only lane was truncated/preempted mid-growth
+            # legitimately issues none): EXACTLY 1.0 under mixed ticks, up
+            # to 2.0 on the retired two-program path
+            "dispatches_per_tick":
+                self.dispatches / max(self.dispatch_ticks, 1),
+            # active lanes per dispatch / slots: mixed ticks keep every
+            # occupied lane advancing in every dispatch
+            "mean_occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
             "prefill_tokens": self.prefill_tokens,
             "decode_tokens": self.decode_tokens,
             "preemptions": self.preemptions,

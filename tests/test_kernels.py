@@ -96,6 +96,63 @@ def test_paged_attention_sweep(B, H, Hkv, D, page, T):
     assert jnp.max(jnp.abs(out - ref)) < 2e-5
 
 
+@pytest.mark.parametrize("C", [1, 4, 16])          # decode / small / chunk
+def test_paged_chunk_attention_sweep(C):
+    """Chunked (mixed-tick) kernel vs its gather oracle: ragged per-lane
+    lengths (a prefilling lane, a decoding lane, an idle lane) at positions
+    that straddle page boundaries."""
+    B, H, Hkv, D, page, T = 3, 8, 2, 32, 8, 6
+    P = T * B + 2
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (B, C, H, D))
+    k_pages = jax.random.normal(ks[1], (P, page, Hkv, D))
+    v_pages = jax.random.normal(ks[2], (P, page, Hkv, D))
+    bt = jnp.asarray(np.arange(1, 1 + B * T).reshape(B, T), jnp.int32)
+    # lane 0: full prefill chunk straddling a page boundary; lane 1: decode
+    # lane (one valid token) mid-page; lane 2: empty lane with no history
+    pos = jnp.asarray([page - 3, 2 * page + 5, 0], jnp.int32)
+    nv = jnp.asarray([C, 1, 0], jnp.int32)
+    out = PA.paged_chunk_attention(q, k_pages, v_pages, bt, pos, nv,
+                                   interpret=True)
+    ref = R.paged_chunk_attention_ref(q, k_pages, v_pages, bt, pos, nv)
+    assert out.shape == (B, C, H, D)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+    assert bool(jnp.all(out[2] == 0))            # idle lane emits zeros
+
+
+def test_paged_chunk_attention_c1_matches_decode_kernel():
+    """At C == 1 / n_valid == 1 the chunked kernel must agree with the
+    single-token decode kernel contract (seq_lens == pos + 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(21), 3)
+    B, H, Hkv, D, page, T = 2, 4, 2, 32, 8, 3
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kp = jax.random.normal(ks[1], (B * T + 2, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (B * T + 2, page, Hkv, D))
+    bt = jnp.asarray(np.arange(1, 1 + B * T).reshape(B, T), jnp.int32)
+    pos = jnp.asarray([10, page - 1], jnp.int32)
+    one = jnp.ones((B,), jnp.int32)
+    chunk = PA.paged_chunk_attention(q, kp, vp, bt, pos, one, interpret=True)
+    dec = PA.paged_decode_attention(q[:, 0], kp, vp, bt, pos + 1,
+                                    interpret=True)
+    assert jnp.max(jnp.abs(chunk[:, 0] - dec)) < 2e-5
+
+
+def test_paged_chunk_attention_ops_dispatch():
+    """CPU fallback (gather oracle) == interpret-mode chunked kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 4, 4, 32))
+    k_pages = jax.random.normal(ks[1], (6, 8, 2, 32))
+    v_pages = jax.random.normal(ks[2], (6, 8, 2, 32))
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    pos = jnp.asarray([9, 3], jnp.int32)
+    nv = jnp.asarray([4, 2], jnp.int32)
+    a = ops.paged_chunk_attention(q, k_pages, v_pages, bt, pos, nv,
+                                  use_pallas=False)
+    b = ops.paged_chunk_attention(q, k_pages, v_pages, bt, pos, nv,
+                                  interpret=True)
+    assert jnp.max(jnp.abs(a - b)) < 2e-5
+
+
 def test_paged_attention_ops_dispatch():
     """CPU fallback (gather ref) == interpret-mode kernel."""
     ks = jax.random.split(jax.random.PRNGKey(4), 3)

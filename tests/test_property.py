@@ -173,6 +173,43 @@ def test_paged_dual_branch_matches_dense_oracle(prompt, page_size):
     assert got == oracle, (prompt, page_size, got, oracle)
 
 
+@given(st.lists(st.integers(4, 12), min_size=2, max_size=3),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=6, deadline=None)
+def test_mixed_tick_engine_matches_dense_oracle(prompt_lens, seed):
+    """Random ragged prompts through the MIXED-tick engine on a page-starved
+    pool (3 slots competing for 4 pages, so long draws preempt and
+    re-admit): every request's greedy tokens must equal the dense
+    full-forward oracle token-for-token — the serving invariant with the
+    one-dispatch-per-tick program, preemption and re-prefill in the loop."""
+    from repro.models import model as M
+    from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+    cfg, params = _dual_oracle_cfg_params()
+    max_new = 3
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in prompt_lens]
+
+    def oracle(prompt):
+        toks = list(prompt)
+        for _ in range(max_new):
+            lg, _, _ = M.forward(params, cfg,
+                                 {"tokens": jnp.asarray([toks])}, "train")
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        return toks[len(prompt):]
+
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=5, slots=3, prefill_chunk=8, max_seq=64,
+        mixed_ticks=True))
+    for i, p in enumerate(prompts):
+        eng.submit(ServeRequest(rid=i, prompt=p, max_new=max_new))
+    done = {r.rid: r for r in eng.run()}
+    assert eng.stats()["dispatches_per_tick"] == 1.0
+    for i, p in enumerate(prompts):
+        assert not done[i].truncated
+        assert done[i].generated == oracle(p), (
+            prompt_lens, seed, i, eng.stats()["preemptions"])
+
+
 @given(st.integers(0, 1000))
 @settings(**SETTINGS)
 def test_data_pipeline_deterministic(step):

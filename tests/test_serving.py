@@ -1,7 +1,9 @@
 """Paged serving engine: paged decode == full forward, chunk-width
 invariance, FAL-signal caching, preemption->resume determinism, sampling
-reproducibility, dual-branch (MHA||MLP) continuous batching, and allocator
-bookkeeping."""
+reproducibility, dual-branch (MHA||MLP) continuous batching, MIXED ticks
+(one (slots, C) dispatch per engine step serving prefill + decode lanes
+together, token streams identical to the two-dispatch engine), and
+allocator bookkeeping."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -234,6 +236,121 @@ def test_paged_a1_sig_kept_for_inactive_slots():
     after = np.asarray(cache["a1_sig"])
     assert not np.allclose(before[0], after[0])   # active slot updated
     assert np.array_equal(before[1], after[1])    # inactive slot untouched
+
+
+# --------------------------------------------------------------------------- #
+# mixed ticks: ONE (slots, C) dispatch per engine step
+# --------------------------------------------------------------------------- #
+SIX_STYLES = ("preln", "parallel", "fal", "falplus", "ablation1", "ablation2")
+
+
+def _engine_tokens(cfg, params, mixed, *, num_pages=48, n=6, slots=4,
+                   dual=False):
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=num_pages, slots=slots, prefill_chunk=8,
+        max_seq=64, mixed_ticks=mixed, dual_branch=dual))
+    for r in _reqs(cfg, n=n):
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == n
+    return {r.rid: r.generated for r in done}, eng
+
+
+@pytest.mark.parametrize("conn", SIX_STYLES)
+def test_mixed_tick_matches_two_dispatch_styles(conn):
+    """Mixed-tick token streams must be identical to the two-dispatch
+    engine's for every connection style (the engine-level serving
+    invariant), with exactly one dispatch per tick."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    two, _ = _engine_tokens(cfg, params, mixed=False)
+    mix, eng = _engine_tokens(cfg, params, mixed=True)
+    assert mix == two, conn
+    st = eng.stats()
+    assert st["dispatches"] == st["ticks"] == st["mixed_calls"]
+    assert st["dispatches_per_tick"] == 1.0
+    assert st["prefill_calls"] == st["decode_calls"] == 0
+
+
+@pytest.mark.parametrize("arch,family", [
+    ("qwen3-moe-30b-a3b", "moe"),
+    ("deepseek-v3-671b", "moe"),           # MLA latent pages ride mixed too
+    ("llava-next-mistral-7b", "vlm"),
+])
+def test_mixed_tick_matches_two_dispatch_families(arch, family):
+    """Same engine-level invariant across the decoder families (vlm served
+    text-only — the engine's request plumbing contract)."""
+    cfg = get_config(arch).reduced().replace(connection="fal")
+    if cfg.n_image_tokens:
+        cfg = cfg.replace(n_image_tokens=0)
+    assert cfg.family == family
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    two, _ = _engine_tokens(cfg, params, mixed=False, n=4)
+    mix, eng = _engine_tokens(cfg, params, mixed=True, n=4)
+    assert mix == two, arch
+    assert eng.stats()["dispatches_per_tick"] == 1.0
+
+
+def test_mixed_tick_preemption_resume_matches_two_dispatch():
+    """Page pressure under mixed ticks: preempted/re-admitted requests must
+    still produce exactly the two-dispatch engine's tokens (position-derived
+    sampling keys + re-prefill make the resume deterministic)."""
+    cfg, params = _cfg_params()
+    two, _ = _engine_tokens(cfg, params, mixed=False, num_pages=64, n=10)
+    mix, eng = _engine_tokens(cfg, params, mixed=True, num_pages=9, n=10)
+    assert eng.stats()["preemptions"] > 0      # pressure actually preempted
+    assert eng.stats()["dispatches_per_tick"] == 1.0
+    assert mix == two
+
+
+def test_mixed_tick_dual_branch_engine():
+    """dual_branch composes with mixed ticks (branch-parallel at op level;
+    the fused C == 1 Pallas dispatch belongs to the two-program path)."""
+    cfg, params = _cfg_params()
+    seq, _ = _engine_tokens(cfg, params, mixed=True)
+    dual, eng = _engine_tokens(cfg, params, mixed=True, dual=True)
+    assert eng.plan.dual_branch
+    assert eng.stats()["dispatches_per_tick"] == 1.0
+    assert dual == seq
+
+
+def test_mixed_tick_compiles_one_program(monkeypatch):
+    """The tentpole contract, asserted via trace counting: the mixed engine
+    traces its jitted step exactly ONCE — a single (slots, prefill_chunk)
+    program serves every tick — where the two-dispatch engine traces the
+    (slots, chunk) and (slots, 1) shapes."""
+    cfg, params = _cfg_params()
+    traces = []
+    orig = M.paged_decode_step
+
+    def counting(params, cfg, batch, cache, plan=None, **kw):
+        traces.append(tuple(batch["tokens"].shape))
+        return orig(params, cfg, batch, cache, plan, **kw)
+
+    monkeypatch.setattr(M, "paged_decode_step", counting)
+
+    _, eng = _engine_tokens(cfg, params, mixed=True)
+    assert traces == [(4, 8)], traces          # ONE trace: (slots, chunk)
+    st = eng.stats()
+    assert st["mixed_calls"] == st["ticks"] and st["dispatches_per_tick"] == 1
+
+    traces.clear()
+    _engine_tokens(cfg, params, mixed=False)
+    assert sorted(traces) == [(4, 1), (4, 8)]  # two programs, one per phase
+
+
+def test_mixed_tick_occupancy_counts_active_lanes():
+    """Occupancy = active lanes / slots per dispatch; a lone request in a
+    4-slot engine must report 0.25, full slots report 1.0."""
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=48, slots=4, prefill_chunk=8, max_seq=64))
+    eng.submit(ServeRequest(rid=0, prompt=np.arange(4) % cfg.vocab,
+                            max_new=4))
+    eng.run()
+    st = eng.stats()
+    assert st["mean_occupancy"] == 0.25
+    assert st["dispatches_per_tick"] == 1.0
 
 
 # --------------------------------------------------------------------------- #
