@@ -1,37 +1,38 @@
 """Serving benchmark: ragged Poisson arrivals through the paged engine vs
-the seed token-by-token engine — tok/s, p50/p99 request latency, per-tick
-decode latency, dispatches per tick, page utilization, preemption count.
+the seed token-by-token engine — tok/s, TTFT / inter-token / request
+latency percentiles (measured BY THE ENGINE's metrics registry, not
+recomputed bench-side), dispatches per tick, page utilization, preemption
+count.
 
-Three paged paths are timed against the seed engine on the IDENTICAL
+Two paged paths are timed against the seed engine on the IDENTICAL
 workload (same prompts, arrival ticks, generation lengths, greedy
 decoding):
 
-  * ``paged``  — the retired two-program engine (``mixed_ticks=False``): a
-    (slots, chunk) prefill dispatch then a (slots, 1) decode dispatch per
-    tick;
-  * ``mixed``  — the mixed-tick engine: ONE (slots, chunk) dispatch per
-    tick serving prefill and decode lanes together (the chunked
-    block-table kernel).  Timed on a PREFILL-BURST load (heavier Poisson
-    arrivals, so most ticks carry both phases — the regime the fusion
-    targets) against the two-dispatch engine on the identical workload;
-    tokens are asserted identical and the ``dispatches_per_tick == 1``
-    contract is asserted here.  On the padded cpu-fallback path the
-    per-lane chunk columns cost real FLOPs, so the decode-only tail
-    favors the (slots, 1) program — the recorded ``dispatch_path`` keeps
-    that from reading as a kernel regression;
-  * ``dual``   — (``--dual``) the dual-branch (MHA||MLP) engine on the
-    two-program path (its fused Pallas dispatch is the C == 1 decode
-    tick); asserts token identity and gates on the structural
-    no-extra-collectives assertion under explicit TP.
+  * ``mixed`` — the engine: ONE (slots, chunk) dispatch per tick serving
+    prefill and decode lanes together (the chunked block-table kernel).
+    Timed on a PREFILL-BURST load (heavier Poisson arrivals, so most ticks
+    carry both phases — the regime the fusion targets); the
+    ``dispatches_per_tick == 1`` contract is asserted here.
+  * ``dual``  — (``--dual``) the dual-branch (MHA||MLP) engine: each
+    steady-state block's FFN issued off the cached per-slot
+    first-attention signal concurrently with the paged KV gather; asserts
+    token identity and gates on the structural no-extra-collectives
+    assertion under explicit TP.
 
-Every engine is warmed up before timing — BOTH jitted programs for the
-two-program engines, the single program for the mixed engine — and the
-dispatch path actually timed (``fused-tpu`` vs ``cpu-fallback``) is
-recorded next to every number so a cold/fallback run can never read as a
-kernel regression.
+Every engine is warmed up before timing, and every ``dispatch_path`` in
+the emitted JSON comes from the RUNTIME kernel-dispatch registry
+(``kernels.ops.dispatch_paths()``): the dispatchers record fused-tpu vs
+cpu-fallback per call site when their programs trace, so a cold/fallback
+run can never read as a kernel regression and the label can never be a
+bench-side guess.
+
+``--trace`` re-runs the burst workload with a ``repro.obs.Tracer``
+attached, writes a Perfetto-loadable Chrome trace (per-tick spans,
+per-dispatch spans, per-request lifecycle events) and records the tracing
+overhead as a tok/s ratio — CI gates it at < 5%.
 
 Standalone:  PYTHONPATH=src python benchmarks/bench_serving.py [--dual]
-             [--json] (writes BENCH_serving.json)
+             [--trace] [--json] (writes BENCH_serving.json)
 """
 from __future__ import annotations
 
@@ -48,20 +49,29 @@ except ImportError:   # plain-script invocation: benchmarks/ itself on path
 force_host_devices()
 
 import dataclasses
+import math
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.kernels import ops
 from repro.models import model as M
+from repro.obs.trace import NULL_TRACER, Tracer, validate_chrome_trace
 from repro.serve.decode import ContinuousBatcher, Request
 from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
 
 
-def _dispatch_path():
-    from repro.kernels.ops import _default_use_pallas
-    return "fused-tpu" if _default_use_pallas() else "cpu-fallback"
+def measured_dispatch_path():
+    """(per-site map, consensus label) from the RUNTIME dispatch registry.
+    Call after the engines have traced their programs; 'mixed' means call
+    sites disagree (e.g. a fused kernel with a per-shape fallback)."""
+    paths = ops.dispatch_paths()
+    vals = set(paths.values())
+    if not vals:
+        return paths, "unmeasured"
+    return paths, vals.pop() if len(vals) == 1 else "mixed"
 
 
 def _workload(vocab, n_requests=12, seed=0, rate=0.5):
@@ -80,7 +90,7 @@ def _workload(vocab, n_requests=12, seed=0, rate=0.5):
 
 def _drive(submit, step, pending, active_or_queued):
     """Tick loop feeding arrivals at their scheduled tick; returns
-    (wall seconds, per-request latency in ticks)."""
+    (wall seconds, ticks driven)."""
     tick = 0
     t0 = time.time()
     while pending or active_or_queued():
@@ -95,32 +105,23 @@ def _drive(submit, step, pending, active_or_queued):
 
 
 def _warmup(engine, mk_req):
-    """Compile every jitted program the engine's config uses outside the
-    timed region: the warmup request's prompt (40 tokens) exceeds the
-    prefill chunk and it decodes several tokens, so the two-program engine
-    traces BOTH its (B, chunk) and (B, 1) shapes and the mixed engine its
-    single (B, chunk) shape — nothing is ever timed cold."""
+    """Compile the engine's single jitted program outside the timed region:
+    the warmup request's prompt (40 tokens) exceeds the prefill chunk and
+    it decodes several tokens, so the (B, chunk) mixed program is traced —
+    nothing is ever timed cold."""
     engine.submit(mk_req())
     engine.run()
 
 
-def _lat_percentiles(samples):
-    """(p50, p99) of a sorted-able sample list; (0, 0) when empty."""
-    if not samples:
-        return 0.0, 0.0
-    s = sorted(samples)
-    p50 = s[len(s) // 2]
-    p99 = s[min(len(s) - 1, int(np.ceil(0.99 * len(s))) - 1)]
-    return p50, p99
-
-
-def _run_paged(cfg, params, work, ecfg):
+def _run_paged(cfg, params, work, ecfg, tracer=None):
     """Drive one paged-engine run over ``work``; returns (wall seconds,
-    finished requests, warmup-corrected stats, per-decode-tick wall ms)."""
-    eng = PagedEngine(cfg, params, ecfg)
+    finished requests, warmup-corrected stats)."""
+    eng = PagedEngine(cfg, params, ecfg, tracer=tracer)
     _warmup(eng, lambda: ServeRequest(rid=-1, prompt=np.arange(40) % cfg.vocab,
                                       max_new=4))
-    # drop the warmup request from every reported stat (jit stays warm)
+    # drop the warmup request from every reported stat (jit stays warm;
+    # reset also drops the warmup's trace events so the exported trace
+    # holds exactly the timed workload)
     eng.finished.clear()
     eng.reset_stats()
 
@@ -128,23 +129,10 @@ def _run_paged(cfg, params, work, ecfg):
         eng.submit(ServeRequest(rid=w["rid"], prompt=w["prompt"],
                                 max_new=w["max_new"]))
 
-    decode_tick_ms = []
-
-    def step():
-        # a decode lane is waiting iff some active slot has exactly one
-        # pending token; on the two-program path that lane's advance is
-        # head-of-line blocked behind the tick's prefill dispatch
-        had_decode = any(r is not None and len(r.known()) - r.pos == 1
-                         for r in eng.slots)
-        t0 = time.perf_counter()
-        eng.step()
-        if had_decode:
-            decode_tick_ms.append((time.perf_counter() - t0) * 1e3)
-
     dt, _ = _drive(
-        submit, step, list(work),
+        submit, eng.step, list(work),
         lambda: eng.queue or any(s is not None for s in eng.slots))
-    return dt, eng.finished, eng.stats(), decode_tick_ms
+    return dt, eng.finished, eng.stats()
 
 
 def _dual_structural_gate():
@@ -156,14 +144,14 @@ def _dual_structural_gate():
     return tp.assert_dual_no_extra_collectives(mesh, modes=("fal",))["fal"]
 
 
-def bench(csv, dual=False):
+def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
     cfg = get_config("gpt2-117m").replace(
         n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, d_ff=1024,
         vocab=2048, max_seq=512, dtype="float32", param_dtype="float32",
         remat=False, attn_block_q=64, attn_block_k=128, connection="fal")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     max_seq, slots = 160, 4
-    data = {"dispatch_path": _dispatch_path()}
+    data = {}
 
     # ---- seed engine: contiguous cache, one token per tick ---------------
     work = _workload(cfg.vocab)
@@ -190,103 +178,149 @@ def bench(csv, dual=False):
                     "dispatches_per_tick":
                         seed_eng.stats()["dispatches_per_tick"]}
 
-    # ---- paged engine (two-program path): chunked prefill + paged KV -----
+    # ---- paged engine (mixed ticks): ONE dispatch per tick ---------------
     work = _workload(cfg.vocab)
     ecfg = EngineConfig(page_size=16, num_pages=48, slots=slots,
-                        prefill_chunk=32, max_seq=max_seq,
-                        mixed_ticks=False)
-    dt, done, st, dec_ms = _run_paged(cfg, params, work, ecfg)
+                        prefill_chunk=32, max_seq=max_seq)
+    dt, done, st = _run_paged(cfg, params, work, ecfg)
     toks = sum(len(r.generated) for r in done)
-    lat_ticks = sorted(r.finish_tick - r.submit_tick for r in done)
-    p50, p99 = _lat_percentiles(lat_ticks)
-    d50, d99 = _lat_percentiles(dec_ms)
+    assert toks == toks_seed, (toks, toks_seed)
+    assert st["dispatches_per_tick"] == 1.0, st
+    # the dispatch path the engines ACTUALLY lowered, from the runtime
+    # kernel-dispatch registry (recorded at trace time in kernels.ops)
+    site_paths, path = measured_dispatch_path()
+    data["dispatch_path"] = path
+    data["dispatch_paths"] = site_paths
     csv("serving_paged_engine", dt * 1e6,
-        f"tok_per_s={toks/dt:.0f};p50_ticks={p50};p99_ticks={p99};"
-        f"decode_p50_ms={d50:.1f};decode_p99_ms={d99:.1f};"
-        f"dispatches_per_tick={st['dispatches_per_tick']:.2f}")
+        f"tok_per_s={toks/dt:.0f};"
+        f"ttft_p50_ms={st['ttft_ms']['p50']:.1f};"
+        f"ttft_p99_ms={st['ttft_ms']['p99']:.1f};"
+        f"itl_p50_ms={st['inter_token_ms']['p50']:.1f};"
+        f"dispatches_per_tick={st['dispatches_per_tick']:.2f};"
+        f"path={path}")
     csv("serving_paged_pages", 0,
         f"mean_util={st['mean_page_utilization']:.2f};"
         f"peak={st['pages']['peak_in_use']};"
         f"preemptions={st['preemptions']}")
     csv("serving_prefill_speedup", 0,
         f"paged_vs_seed={dt_seed/dt:.2f};"
-        f"prefill_dispatches={st['prefill_calls']};"
         f"seed_prefill_dispatches~={sum(len(w['prompt']) for w in work)}")
-    assert toks == toks_seed, (toks, toks_seed)
-    data["paged"] = {"tok_per_s": toks / dt, "p50_ticks": p50,
-                     "p99_ticks": p99,
-                     "decode_p50_ms": d50, "decode_p99_ms": d99,
+    data["paged"] = {"tok_per_s": toks / dt,
+                     "speedup_vs_seed": dt_seed / dt,
+                     "ttft_p50_ms": st["ttft_ms"]["p50"],
+                     "ttft_p99_ms": st["ttft_ms"]["p99"],
+                     "inter_token_p50_ms": st["inter_token_ms"]["p50"],
+                     "inter_token_p99_ms": st["inter_token_ms"]["p99"],
+                     "queue_wait_p50_ticks": st["queue_wait_ticks"]["p50"],
+                     "p50_ticks": st["request_latency_ticks"]["p50"],
+                     "p99_ticks": st["request_latency_ticks"]["p99"],
+                     "decode_p50_ms": st["dispatch_ms"]["p50"],
+                     "decode_p99_ms": st["dispatch_ms"]["p99"],
                      "dispatches_per_tick": st["dispatches_per_tick"],
                      "mean_occupancy": st["mean_occupancy"],
                      "mean_page_utilization": st["mean_page_utilization"],
-                     "preemptions": st["preemptions"]}
+                     "preemptions": st["preemptions"],
+                     "dispatch_path": path}
     tok_map = {r.rid: r.generated for r in done}
 
-    # ---- mixed-tick engine: ONE (slots, chunk) dispatch per tick ---------
-    # prefill-burst load: heavier arrivals + a finer chunk keep both phases
-    # live in most ticks — the head-of-line regime the fusion targets; the
-    # two-dispatch engine runs the IDENTICAL workload and config
+    # ---- prefill-burst load: the regime the mixed fusion targets ---------
+    # heavier arrivals + a finer chunk keep both phases live in most ticks;
+    # decode lanes ride the same dispatch instead of queueing behind a
+    # prefill program
     burst = dict(n_requests=16, rate=2.0)
     ecfg_burst = dataclasses.replace(ecfg, prefill_chunk=8)
-    dt_t, done_t, st_t, dec_ms_t = _run_paged(
+    dt_m, done_m, st_m = _run_paged(
         cfg, params, _workload(cfg.vocab, **burst), ecfg_burst)
-    dt_m, done_m, st_m, dec_ms_m = _run_paged(
-        cfg, params, _workload(cfg.vocab, **burst),
-        dataclasses.replace(ecfg_burst, mixed_ticks=True))
-    toks_t = sum(len(r.generated) for r in done_t)
     toks_m = sum(len(r.generated) for r in done_m)
-    assert ({r.rid: r.generated for r in done_m}
-            == {r.rid: r.generated for r in done_t}), \
-        "mixed-tick tokens diverged from the two-dispatch engine"
     assert st_m["dispatches_per_tick"] == 1.0, st_m
-    d50_t, d99_t = _lat_percentiles(dec_ms_t)
-    d50_m, d99_m = _lat_percentiles(dec_ms_m)
-    p50_m, p99_m = _lat_percentiles(
-        sorted(r.finish_tick - r.submit_tick for r in done_m))
-    csv("serving_two_dispatch_under_burst", dt_t * 1e6,
-        f"tok_per_s={toks_t/dt_t:.0f};"
-        f"decode_p50_ms={d50_t:.1f};decode_p99_ms={d99_t:.1f};"
-        f"dispatches_per_tick={st_t['dispatches_per_tick']:.2f}")
-    csv("serving_mixed_tick_engine", dt_m * 1e6,
+    csv("serving_mixed_tick_burst", dt_m * 1e6,
         f"tok_per_s={toks_m/dt_m:.0f};"
-        f"decode_p50_ms={d50_m:.1f};decode_p99_ms={d99_m:.1f};"
+        f"ttft_p50_ms={st_m['ttft_ms']['p50']:.1f};"
+        f"itl_p50_ms={st_m['inter_token_ms']['p50']:.1f};"
+        f"decode_p50_ms={st_m['dispatch_ms']['p50']:.1f};"
         f"dispatches_per_tick={st_m['dispatches_per_tick']:.2f};"
         f"occupancy={st_m['mean_occupancy']:.2f};"
-        f"mixed_vs_two_dispatch={dt_t/dt_m:.2f};"
-        f"path={data['dispatch_path']}")
+        f"path={path}")
     data["mixed"] = {"tok_per_s": toks_m / dt_m,
-                     "p50_ticks": p50_m, "p99_ticks": p99_m,
-                     "decode_p50_ms": d50_m, "decode_p99_ms": d99_m,
+                     "ttft_p50_ms": st_m["ttft_ms"]["p50"],
+                     "ttft_p99_ms": st_m["ttft_ms"]["p99"],
+                     "inter_token_p50_ms": st_m["inter_token_ms"]["p50"],
+                     "inter_token_p99_ms": st_m["inter_token_ms"]["p99"],
+                     "decode_p50_ms": st_m["dispatch_ms"]["p50"],
+                     "decode_p99_ms": st_m["dispatch_ms"]["p99"],
                      "dispatches_per_tick": st_m["dispatches_per_tick"],
                      "mean_occupancy": st_m["mean_occupancy"],
-                     "speedup_vs_two_dispatch": dt_t / dt_m,
                      "preemptions": st_m["preemptions"],
-                     "dispatch_path": data["dispatch_path"],
+                     "dispatch_path": path,
                      "workload": {**burst,
-                                  "prefill_chunk": ecfg_burst.prefill_chunk},
-                     "two_dispatch": {
-                         "tok_per_s": toks_t / dt_t,
-                         "decode_p50_ms": d50_t, "decode_p99_ms": d99_t,
-                         "dispatches_per_tick":
-                             st_t["dispatches_per_tick"]}}
+                                  "prefill_chunk": ecfg_burst.prefill_chunk}}
+    burst_tokens = {r.rid: r.generated for r in done_m}
+
+    # ---- tracing overhead: identical burst workload, tracer attached -----
+    # ONE engine (one compiled program), interleaved traced/untraced passes
+    # with best-of-N per mode, so host timing drift can't masquerade as
+    # tracer cost — the gate is the marginal price of the span sites
+    if trace:
+        tracer = Tracer(enabled=True)
+        eng = PagedEngine(cfg, params, ecfg_burst)
+        _warmup(eng, lambda: ServeRequest(rid=-1,
+                                          prompt=np.arange(40) % cfg.vocab,
+                                          max_new=4))
+
+        def one_pass(tr):
+            eng.tracer = tr
+            eng.finished.clear()
+            work_tr = _workload(cfg.vocab, **burst)
+            dt, _ = _drive(
+                lambda w, tick: eng.submit(
+                    ServeRequest(rid=w["rid"], prompt=w["prompt"],
+                                 max_new=w["max_new"])),
+                eng.step, list(work_tr),
+                lambda: eng.queue or any(s is not None for s in eng.slots))
+            toks = sum(len(r.generated) for r in eng.finished)
+            assert ({r.rid: r.generated for r in eng.finished}
+                    == burst_tokens), "tracing changed the token stream"
+            return dt, toks
+
+        best = {"off": math.inf, "on": math.inf}
+        toks_tr = 0
+        for _ in range(2):
+            dt_off, _ = one_pass(NULL_TRACER)
+            best["off"] = min(best["off"], dt_off)
+            tracer.clear()           # export holds exactly the last pass
+            dt_on, toks_tr = one_pass(tracer)
+            best["on"] = min(best["on"], dt_on)
+        eng.tracer = NULL_TRACER
+        n_events = validate_chrome_trace(tracer.export())
+        tracer.write(trace_out)
+        overhead = best["on"] / best["off"]
+        csv("serving_trace_overhead", best["on"] * 1e6,
+            f"tok_per_s_traced={toks_tr/best['on']:.0f};"
+            f"overhead_ratio={overhead:.3f};events={n_events};"
+            f"trace={trace_out}")
+        data["trace"] = {"tok_per_s_traced": toks_tr / best["on"],
+                         "tok_per_s_untraced": toks_tr / best["off"],
+                         "overhead_ratio": overhead,
+                         "events": n_events,
+                         "file": trace_out}
 
     if not dual:
         return data
 
-    # ---- dual-branch engine: MHA||MLP branch-parallel decode dispatch ----
-    # (two-program path: the fused Pallas dual dispatch is the C == 1
-    # decode tick; _run_paged warms both programs before timing)
+    # ---- dual-branch engine: MHA||MLP branch-parallel decode -------------
     work = _workload(cfg.vocab)
-    dt_d, done_d, _, _ = _run_paged(cfg, params, work,
+    dt_d, done_d, st_d = _run_paged(cfg, params, work,
                                     dataclasses.replace(ecfg,
                                                         dual_branch=True))
     toks_d = sum(len(r.generated) for r in done_d)
+    site_paths, path = measured_dispatch_path()
+    data["dispatch_paths"] = site_paths
     # the CPU fallback replays the sequential path's exact ops, so tokens
     # are identical request-for-request; the fused TPU kernel's tiled FFN
     # accumulation is only tolerance-close to mlp_apply, where a near-tie
     # argmax may legitimately flip — don't hard-fail there
     tok_map_d = {r.rid: r.generated for r in done_d}
-    if data["dispatch_path"] == "cpu-fallback":
+    if path == "cpu-fallback":
         assert tok_map_d == tok_map, \
             "dual-branch tokens diverged from sequential decode"
     elif tok_map_d != tok_map:
@@ -296,11 +330,12 @@ def bench(csv, dual=False):
     csv("serving_dual_branch_engine", dt_d * 1e6,
         f"tok_per_s={toks_d/dt_d:.0f};"
         f"dual_vs_sequential={dt/dt_d:.2f};"
-        f"path={data['dispatch_path']}")
+        f"path={path}")
     data["dual"] = {"tok_per_s": toks_d / dt_d,
                     "sequential_tok_per_s": toks / dt,
                     "speedup_vs_sequential": dt / dt_d,
-                    "dispatch_path": data["dispatch_path"]}
+                    "dispatches_per_tick": st_d["dispatches_per_tick"],
+                    "dispatch_path": path}
 
     # structural gate: no extra collectives under explicit TP
     if len(jax.devices()) >= 2:
@@ -320,6 +355,11 @@ def main():
     ap.add_argument("--dual", action="store_true",
                     help="also bench the dual-branch engine + structural "
                          "collectives gate")
+    ap.add_argument("--trace", action="store_true",
+                    help="re-run the burst workload with the span tracer "
+                         "attached, write a Chrome trace and record the "
+                         "tok/s overhead")
+    ap.add_argument("--trace-out", default="TRACE_serving.json")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_serving.json")
     ap.add_argument("--json-dir", default=".")
@@ -328,8 +368,12 @@ def main():
     def csv(name, us, derived=""):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
-    data = bench(csv, dual=args.dual)
+    data = bench(csv, dual=args.dual, trace=args.trace,
+                 trace_out=args.trace_out)
     if args.json:
+        from repro.obs.runmeta import run_metadata
+        data["meta"] = run_metadata(timestamp=time.time(),
+                                    dispatch_paths=ops.dispatch_paths())
         path = os.path.join(args.json_dir, "BENCH_serving.json")
         with open(path, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)

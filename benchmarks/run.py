@@ -36,6 +36,11 @@ def main() -> None:
                          "(MHA||MLP) engine, assert token identity vs the "
                          "sequential path and the no-extra-collectives "
                          "structural gate under explicit TP")
+    ap.add_argument("--trace", action="store_true",
+                    help="serving suite: re-run the burst workload with the "
+                         "span tracer attached, write a Chrome trace "
+                         "(TRACE_serving.json) and record the tok/s "
+                         "overhead")
     args = ap.parse_args()
 
     def csv(name, us, derived=""):
@@ -55,7 +60,9 @@ def main() -> None:
             csv, steps=max(steps * 2 // 3, 50)),
         "motivation": lambda: bench_motivation.bench(csv, steps=steps),
         "inference": lambda: bench_inference.bench(csv),
-        "serving": lambda: bench_serving.bench(csv, dual=args.dual),
+        "serving": lambda: bench_serving.bench(
+            csv, dual=args.dual, trace=args.trace,
+            trace_out=os.path.join(args.json_dir, "TRACE_serving.json")),
     }
     failures = 0
     for name, fn in suites.items():
@@ -66,6 +73,14 @@ def main() -> None:
         try:
             data = fn()
             if args.json and isinstance(data, dict):
+                # every emitted BENCH_*.json carries the run's provenance:
+                # git sha, jax/device versions, and the RUNTIME-measured
+                # kernel dispatch path per call site (kernels.ops registry)
+                from repro.kernels.ops import dispatch_paths
+                from repro.obs.runmeta import run_metadata
+                data["meta"] = run_metadata(
+                    timestamp=time.time(),
+                    dispatch_paths=dispatch_paths() or None)
                 path = os.path.join(args.json_dir, f"BENCH_{name}.json")
                 with open(path, "w") as f:
                     json.dump(data, f, indent=1, sort_keys=True)

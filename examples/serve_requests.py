@@ -1,13 +1,13 @@
 """Serving example: the paged continuous-batching engine over a FAL model —
 submits a ragged stream of requests and drains them through fixed batch
-slots with ONE mixed (slots, prefill_chunk) dispatch per engine tick
-(``EngineConfig.mixed_ticks``, the default): prefilling lanes advance up to
-a chunk of prompt tokens while decoding lanes advance one sampled token in
-the SAME jitted call, so decode is never head-of-line blocked behind a
-prefill dispatch.  The example verifies batched outputs match lone-request
-decoding, compares against the retired two-program engine
-(``mixed_ticks=False``: a prefill dispatch then a decode dispatch per
-tick), and re-serves the stream with dual-branch (MHA||MLP) decode: under
+slots with ONE mixed (slots, prefill_chunk) dispatch per engine tick:
+prefilling lanes advance up to a chunk of prompt tokens while decoding
+lanes advance one sampled token in the SAME jitted call, so decode is
+never head-of-line blocked behind a prefill dispatch.  The example
+verifies batched outputs match lone-request decoding, prints the engine's
+own latency metrics (TTFT / inter-token percentiles from its
+``repro.obs`` registry), captures a Perfetto-loadable Chrome trace of the
+run, and re-serves the stream with dual-branch (MHA||MLP) decode: under
 ``fal``/``parallel`` the MLP input never depends on the block's own
 attention, so ``EngineConfig(dual_branch=True)`` issues each steady-state
 block's FFN off the cached per-slot first-attention signal concurrently
@@ -22,7 +22,9 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.plan import ExecutionPlan
+from repro.kernels.ops import dispatch_paths
 from repro.models import model as M
+from repro.obs.trace import Tracer, validate_chrome_trace
 from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
 
 cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
@@ -32,11 +34,13 @@ rng = np.random.default_rng(42)
 # --- submit 10 ragged requests through 4 slots -----------------------------
 # the engine stores a typed ExecutionPlan (phase is pinned to 'paged' for
 # every jitted dispatch it compiles); single_device() = no mesh, no TP.
-# mixed_ticks=True (default): the engine compiles exactly ONE program
+# The attached Tracer records per-tick/per-dispatch spans and per-request
+# lifecycle events (QUEUED -> ADMITTED -> PREFILL -> DECODE -> FINISHED)
 plan = ExecutionPlan.single_device()
 ecfg = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
                     max_seq=128)
-engine = PagedEngine(cfg, params, ecfg, plan=plan)
+tracer = Tracer(enabled=True)
+engine = PagedEngine(cfg, params, ecfg, plan=plan, tracer=tracer)
 prompts = [rng.integers(0, cfg.vocab, 4 + i % 7) for i in range(10)]
 for i, p in enumerate(prompts):
     engine.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
@@ -50,8 +54,19 @@ print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
       f"{st['ticks']} ticks = {st['dispatches_per_tick']:.2f}/tick, "
       f"occupancy {st['mean_occupancy']:.2f}, "
       f"peak pages {st['pages']['peak_in_use']}/{st['pages']['capacity']})")
+print(f"engine-measured latency: ttft p50 {st['ttft_ms']['p50']:.0f}ms "
+      f"p99 {st['ttft_ms']['p99']:.0f}ms, inter-token p50 "
+      f"{st['inter_token_ms']['p50']:.0f}ms, queue wait p50 "
+      f"{st['queue_wait_ticks']['p50']:.1f} ticks")
+print(f"kernel dispatch paths (runtime-measured): {dispatch_paths()}")
 for r in sorted(done, key=lambda r: r.rid)[:3]:
     print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
+
+# the trace is standard Chrome trace-event JSON: load it at ui.perfetto.dev
+n_events = validate_chrome_trace(tracer.export())
+tracer.write("TRACE_example.json")
+print(f"wrote TRACE_example.json ({n_events} events; "
+      f"open in ui.perfetto.dev)")
 
 # --- correctness: batched == lone ------------------------------------------
 lone = PagedEngine(cfg, params, EngineConfig(page_size=8, num_pages=48,
@@ -64,36 +79,18 @@ ref = lone.run()[0].generated
 assert ref == probe.generated, (ref, probe.generated)
 print("continuous batching == lone decoding ✓")
 
-# --- mixed tick == retired two-program engine ------------------------------
-# one release of back-compat: mixed_ticks=False compiles the (slots, chunk)
-# prefill and (slots, 1) decode programs and issues up to two dispatches
-# per tick; token streams must be identical
-two = PagedEngine(cfg, params,
-                  EngineConfig(page_size=8, num_pages=48, slots=4,
-                               prefill_chunk=8, max_seq=128,
-                               mixed_ticks=False), plan=plan)
-for i, p in enumerate(prompts):
-    two.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
-done_two = two.run()
-assert ({r.rid: r.generated for r in done_two}
-        == {r.rid: r.generated for r in done})
-st2 = two.stats()
-print(f"mixed tick == two-dispatch engine ✓ "
-      f"({st['dispatches_per_tick']:.2f} vs "
-      f"{st2['dispatches_per_tick']:.2f} dispatches/tick)")
-
 # --- dual-branch decode: MHA||MLP off the cached FAL signal ----------------
 # valid only for fal/parallel-family connections (ExecutionPlan.validate
 # rejects preln/falplus loudly); on the CPU dispatch path logits — and
 # therefore tokens — are bit-identical to the sequential engine (the fused
-# TPU kernel is tolerance-close), the win is branch overlap.  The fused
-# C == 1 dual Pallas dispatch only exists on the two-program path's decode
-# tick, so this engine pins mixed_ticks=False (under mixed ticks the
-# branches still overlap, at op level)
+# TPU kernel is tolerance-close), the win is branch overlap.  Dual rides
+# the same ONE-dispatch-per-tick mixed program: steady-state blocks issue
+# their FFN off the cached first-attention signal concurrently with the
+# paged KV gather inside that single jitted call.
 dual = PagedEngine(cfg, params,
                    EngineConfig(page_size=8, num_pages=48, slots=4,
                                 prefill_chunk=8, max_seq=128,
-                                dual_branch=True, mixed_ticks=False),
+                                dual_branch=True),
                    plan=plan)
 for i, p in enumerate(prompts):
     dual.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))

@@ -9,9 +9,10 @@ makes that structure an explicit, validated object:
     plan.validate(cfg)                      # loud errors, before tracing
     model.forward(params, cfg, batch, plan)
 
-replacing the stringly-typed ``parallel_ctx`` dict (``{"mesh", "data_axes",
-"model_axis", "tp": "explicit"}``) that used to thread through model, train,
-launch, and serving code unvalidated.
+replacing the stringly-typed context dict that used to thread through
+model, train, launch, and serving code unvalidated (its one-release
+``from_legacy_dict`` shim has expired and is gone — ``resolve`` now
+rejects dicts loudly).
 
 Plan axes:
 
@@ -39,16 +40,11 @@ Plan axes:
 Inside the explicit-TP shard_map the blocks see ``plan.inner()`` — the same
 plan with ``mesh=None`` and ``local_tp_size`` set; ``plan.tp_axis`` is then
 the axis the partial-sum psums reduce over (None on replicated/GSPMD paths).
-
-The legacy dict survives for one release as a shim:
-``ExecutionPlan.from_legacy_dict`` (and every public entry point accepting a
-plan) converts ``parallel_ctx``-style dicts with a DeprecationWarning.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-import warnings
 from typing import Any, Optional, Tuple
 
 
@@ -146,75 +142,23 @@ class ExecutionPlan:
                    dual_branch=bool(dual_branch))
 
     @classmethod
-    def from_legacy_dict(cls, d: dict, phase=Phase.TRAIN) -> "ExecutionPlan":
-        """Shim: convert a legacy ``parallel_ctx`` dict.  One release only."""
-        warnings.warn(
-            "parallel_ctx dicts are deprecated; construct an "
-            "ExecutionPlan (core.plan) instead", DeprecationWarning,
-            stacklevel=2)
-        known = {"mesh", "data_axes", "model_axis", "tp", "tp_axis",
-                 "tp_size"}
-        unknown = set(d) - known
-        if unknown:
-            raise ValueError(f"legacy parallel_ctx has unknown keys "
-                             f"{sorted(unknown)}; known: {sorted(known)}")
-        mesh = d.get("mesh")
-        tp = TPStyle.EXPLICIT if d.get("tp") == "explicit" else (
-            TPStyle.GSPMD if mesh is not None else TPStyle.NONE)
-        if d.get("tp") not in (None, "explicit", "gspmd"):
-            raise ValueError(f"legacy parallel_ctx tp={d['tp']!r} "
-                             f"(expected 'explicit' or 'gspmd')")
-        return cls(phase=Phase.coerce(phase), tp=tp, mesh=mesh,
-                   data_axes=tuple(d.get("data_axes") or ()),
-                   model_axis=d.get("model_axis", "model"),
-                   local_tp_size=int(d.get("tp_size", 0))
-                   if d.get("tp_axis") is not None else 0)
-
-    def to_legacy_dict(self) -> dict:
-        """Inverse of :meth:`from_legacy_dict` (round-trip tested).  Raises
-        for plans a legacy dict cannot express — silently degrading an SP
-        plan to the replicated layout would mislabel any numbers collected
-        under it."""
-        if self.sequence_parallel:
-            raise ValueError(
-                "sequence_parallel plans cannot be expressed as a legacy "
-                "parallel-ctx dict; pass the ExecutionPlan itself")
-        if self.dual_branch:
-            raise ValueError(
-                "dual_branch plans cannot be expressed as a legacy "
-                "parallel-ctx dict; pass the ExecutionPlan itself")
-        d = {"mesh": self.mesh, "data_axes": tuple(self.data_axes),
-             "model_axis": self.model_axis}
-        if self.tp is TPStyle.EXPLICIT:
-            d["tp"] = "explicit"
-        if self.local_tp_size:
-            d["tp_axis"] = self.model_axis
-            d["tp_size"] = self.local_tp_size
-        return d
-
-    @classmethod
-    def resolve(cls, plan, legacy=None) -> "ExecutionPlan":
+    def resolve(cls, plan) -> "ExecutionPlan":
         """Entry-point coercion for every public API taking a plan.
 
         Accepts an ExecutionPlan, a Phase (or its string value — the old
-        ``mode=`` calling convention), a legacy parallel_ctx dict (shimmed,
-        DeprecationWarning), or None (single device, train).  ``legacy`` is
-        the old positional ``parallel_ctx`` slot so pre-plan call shapes
-        like ``forward(params, cfg, batch, "train", {...})`` keep working.
+        ``mode=`` calling convention), or None (single device, train).
+        Context dicts (the pre-plan calling convention) are rejected
+        loudly: their one-release ``from_legacy_dict`` shim has expired.
         """
         if isinstance(plan, ExecutionPlan):
-            if legacy is not None:
-                raise ValueError("pass either a plan or a legacy dict, "
-                                 "not both")
             return plan
         if isinstance(plan, dict):
-            return cls.from_legacy_dict(plan)
+            raise TypeError(
+                "context dicts are no longer accepted (the one-release "
+                "shim expired); construct an ExecutionPlan (core.plan) — "
+                "e.g. ExecutionPlan.from_mesh(mesh, tp='explicit')")
         phase = Phase.coerce(plan) if plan is not None else Phase.TRAIN
-        if legacy is None:
-            return cls.single_device(phase)
-        if isinstance(legacy, ExecutionPlan):
-            return legacy.with_phase(phase)
-        return cls.from_legacy_dict(legacy, phase=phase)
+        return cls.single_device(phase)
 
     # -------------------------------------------------------- derived -----
     def with_phase(self, phase) -> "ExecutionPlan":

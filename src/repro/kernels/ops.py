@@ -4,6 +4,14 @@ On a CPU host (this container, and the dry-run) Pallas TPU kernels cannot
 lower, so ``use_pallas=False`` (default on CPU) dispatches to the jnp
 blockwise/fused implementations with identical numerics.  On TPU, pass
 ``use_pallas=True`` (or set REPRO_USE_PALLAS=1) to run the kernels.
+
+Every dispatcher records the path it lowered (``fused-tpu`` vs
+``cpu-fallback``) per call site into the default metrics registry
+(``repro.obs``) at trace time — a traced program's path cannot change
+without a re-trace, so ``dispatch_paths()`` is the ground truth the
+benchmark JSONs stamp as ``dispatch_path`` (a runtime measurement, not a
+bench-side guess).  ``kernel_dispatch_total`` therefore counts TRACES, not
+executed calls.
 """
 from __future__ import annotations
 
@@ -16,6 +24,35 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_ln_add as _fla
 from repro.kernels import ref as _ref
+from repro.obs import metrics as _metrics
+
+FUSED = "fused-tpu"
+FALLBACK = "cpu-fallback"
+
+#: last path traced per dispatcher call site (survives registry resets:
+#: a warmup reset must not un-measure an already-compiled program)
+_DISPATCH_PATHS = {}
+
+
+def _record_dispatch(site: str, fused: bool) -> str:
+    path = FUSED if fused else FALLBACK
+    _DISPATCH_PATHS[site] = path
+    _metrics.default_registry().counter(
+        f"kernel_dispatch_total.{site}.{path}", unit="traces",
+        site="kernels/ops.py").inc()
+    return path
+
+
+def dispatch_paths() -> dict:
+    """{call site: 'fused-tpu' | 'cpu-fallback'} for every dispatcher
+    traced so far in this process."""
+    return dict(_DISPATCH_PATHS)
+
+
+def reset_dispatch_paths():
+    """Testing hook: forget recorded paths (jit caches survive, so only
+    sites re-traced afterwards will reappear)."""
+    _DISPATCH_PATHS.clear()
 
 
 def _default_use_pallas():
@@ -29,6 +66,7 @@ def _default_use_pallas():
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
                     use_pallas=None, interpret=False):
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("flash_attention", use_pallas or interpret)
     if use_pallas or interpret:
         return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
                                    block_k=block_k, interpret=interpret)
@@ -43,6 +81,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
     addressed through (B,T) block tables.  Pallas kernel on TPU; gather-based
     jnp oracle on CPU (identical numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("paged_decode_attention", use_pallas or interpret)
     if use_pallas or interpret:
         from repro.kernels import paged_attention as _pa
         return _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
@@ -63,6 +102,7 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
     and must not be read.  Pallas kernel on TPU; gather-based jnp oracle on
     CPU (identical numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("paged_chunk_attention", use_pallas or interpret)
     if use_pallas or interpret:
         from repro.kernels import paged_attention as _pa
         return _pa.paged_chunk_attention(q, k_pages, v_pages, block_tables,
@@ -93,6 +133,7 @@ def dual_branch_decode(q, k_pages, v_pages, block_tables, seq_lens, mlp_in,
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
     from repro.models.layers import mlp_apply
     n_tiles = k_pages.shape[2] * block_tables.shape[1]
+    _record_dispatch("dual_branch_decode", use_pallas or interpret)
     if (use_pallas or interpret) and ffn["wi"].shape[-1] % n_tiles == 0:
         from repro.kernels import dual_branch as _db
         attn, y = _db.fused_dual_branch_decode(
@@ -114,6 +155,7 @@ def dual_branch_decode(q, k_pages, v_pages, block_tables, seq_lens, mlp_in,
 def fused_ln_add(x, a1n, scale, bias=None, *, kind="rmsnorm",
                  use_pallas=None, interpret=False):
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("fused_ln_add", use_pallas or interpret)
     if use_pallas or interpret:
         return _fla.fused_ln_add(x, a1n, scale, bias, kind=kind,
                                  interpret=interpret)

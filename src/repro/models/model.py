@@ -11,8 +11,7 @@ Uniform functional API, driven by a typed ``ExecutionPlan``
     decode_step / paged_decode_step(..., plan)
 
 ``plan`` accepts an ExecutionPlan, a Phase (or its string value, e.g.
-"train"), None (single device), or — for one release — a legacy
-parallel-ctx dict via the ``ExecutionPlan.from_legacy_dict`` shim.
+"train"), or None (single device).
 
 Layer stacks run under ``jax.lax.scan`` over stacked params (bounded HLO for
 61-layer models); blocks are ``jax.checkpoint``-ed when cfg.remat.  The FAL
@@ -777,15 +776,12 @@ def init_params(key, cfg):
     return _decoder_init(key, cfg)
 
 
-def forward(params, cfg, batch, plan=None, ctx=None, want="logits"):
+def forward(params, cfg, batch, plan=None, want="logits"):
     """Full-sequence forward -> (logits, aux_loss, extras).
 
     ``plan``: ExecutionPlan | Phase | phase string ("train"/"prefill") |
-    legacy parallel-ctx dict (shimmed) | None (single device, train).
-    ``ctx`` is the retired positional parallel-ctx slot — the pre-plan call
-    shape ``forward(params, cfg, batch, "train", {...})`` still resolves
-    through ``ExecutionPlan.from_legacy_dict`` for one release."""
-    plan = ExecutionPlan.resolve(plan, ctx).validate(cfg)
+    None (single device, train)."""
+    plan = ExecutionPlan.resolve(plan).validate(cfg)
     if not plan.full_sequence:
         raise ValueError(f"forward: phase={plan.phase.value} is not a "
                          f"full-sequence phase; use decode_step / "

@@ -1,0 +1,74 @@
+"""Engine-wide observability: request-lifecycle tracing, a metrics
+registry, and runtime kernel-dispatch telemetry.
+
+Three pieces, all off-by-default and cheap when off:
+
+* ``obs.trace``   — a low-overhead span/event tracer (monotonic clocks,
+  context-manager API) exporting Chrome trace-event JSON loadable in
+  Perfetto.  ``PagedEngine`` emits per-tick spans and per-request
+  lifecycle events (QUEUED -> ADMITTED -> PREFILL -> DECODE ->
+  PREEMPTED/requeued -> FINISHED); engine dispatches are additionally
+  wrapped in ``jax.profiler.TraceAnnotation`` so XLA device profiles line
+  up with the engine spans.
+* ``obs.metrics`` — counters / gauges / log-bucket histograms with
+  percentile summaries, JSON export (merged into ``PagedEngine.stats()``)
+  and Prometheus text-format export for scrape-based deployments.
+* ``obs.runmeta`` — run-metadata stamping (git sha, jax/device versions)
+  for every BENCH_*.json the benchmark harness writes.
+
+Kernel-dispatch telemetry lives in ``kernels.ops``: every dispatcher
+records which path (``fused-tpu`` vs ``cpu-fallback``) it lowered per call
+site into the default registry, so benchmark JSONs carry MEASURED dispatch
+paths instead of a bench-side guess.
+
+Metric-name reference
+=====================
+
+======================================  =========  =======  ==========================================
+name                                    type       unit     emitting site
+======================================  =========  =======  ==========================================
+engine_ticks_total                      counter    ticks    serve/scheduler.py  PagedEngine.step
+engine_dispatches_total                 counter    calls    serve/scheduler.py  PagedEngine._run_call
+engine_mixed_calls_total                counter    calls    serve/scheduler.py  PagedEngine._step_mixed
+engine_prefill_tokens_total             counter    tokens   serve/scheduler.py  PagedEngine._run_call
+engine_decode_tokens_total              counter    tokens   serve/scheduler.py  PagedEngine._run_call
+engine_preemptions_total                counter    events   serve/scheduler.py  PagedEngine._preempt
+engine_rejected_total                   counter    events   serve/scheduler.py  PagedEngine._reject
+engine_admitted_total                   counter    events   serve/scheduler.py  PagedEngine._admit
+engine_finished_total                   counter    events   serve/scheduler.py  PagedEngine._finish
+engine_occupancy                        histogram  ratio    serve/scheduler.py  PagedEngine._run_call
+engine_page_utilization                 histogram  ratio    serve/scheduler.py  PagedEngine.step
+engine_queue_wait_ticks                 histogram  ticks    serve/scheduler.py  PagedEngine._admit
+engine_ttft_ms                          histogram  ms       serve/scheduler.py  PagedEngine._run_call
+engine_ttft_ticks                       histogram  ticks    serve/scheduler.py  PagedEngine._run_call
+engine_inter_token_ms                   histogram  ms       serve/scheduler.py  PagedEngine._run_call
+engine_request_latency_ticks            histogram  ticks    serve/scheduler.py  PagedEngine._finish
+engine_dispatch_ms                      histogram  ms       serve/scheduler.py  PagedEngine._run_call
+pages_in_use                            gauge      pages    serve/paged_cache.py PageAllocator
+pages_alloc_total                       counter    pages    serve/paged_cache.py PageAllocator.alloc
+pages_free_total                        counter    pages    serve/paged_cache.py PageAllocator.free
+batcher_ticks_total                     counter    ticks    serve/decode.py     ContinuousBatcher.step
+batcher_dispatches_total                counter    calls    serve/decode.py     ContinuousBatcher.step
+batcher_occupancy                       histogram  ratio    serve/decode.py     ContinuousBatcher.step
+kernel_dispatch_total.<site>.<path>     counter    traces   kernels/ops.py      every dispatcher
+train_steps_total                       counter    steps    train/trainer.py    train()
+train_tokens_total                      counter    tokens   train/trainer.py    train()
+train_step_ms                           histogram  ms       train/trainer.py    train()
+train_<metric>                          gauge      —        train/trainer.py    every logged step scalar
+train_eval_ppl                          gauge      ppl      train/trainer.py    eval cadence
+======================================  =========  =======  ==========================================
+
+``kernel_dispatch_total`` counts TRACES, not executed calls: the
+dispatchers run under ``jax.jit``, so the per-site record fires when a
+(site, shape) program is traced and the chosen path cannot change without
+a re-trace — exactly the invariant the BENCH dispatch-path labels need.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+)
+from repro.obs.runmeta import run_metadata  # noqa: F401
+from repro.obs.trace import NULL_TRACER, Tracer  # noqa: F401

@@ -1,0 +1,56 @@
+"""Run-metadata stamping for benchmark artifacts.
+
+Every BENCH_*.json the harness writes carries a ``meta`` block identifying
+WHAT produced the numbers: git sha, jax/jaxlib versions, device kind and
+count, python version, and the runner-supplied timestamp.  Without it a
+committed BENCH number is unfalsifiable — there is no way to tell a TPU
+run from a CPU fallback or a stale artifact from a fresh one.
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+import sys
+
+
+def _git_sha(repo_dir: str = ".") -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"], cwd=repo_dir,
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            sha = out.stdout.strip()
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], cwd=repo_dir,
+                capture_output=True, text=True, timeout=10)
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                sha += "-dirty"
+            return sha
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    return "unknown"
+
+
+def run_metadata(timestamp: float = None, repo_dir: str = ".",
+                 dispatch_paths: dict = None) -> dict:
+    """Stamp for a benchmark run.  ``timestamp`` is passed in by the runner
+    (scripts cannot self-date deterministically under replay harnesses);
+    ``dispatch_paths`` is the runtime kernel-dispatch map from
+    ``kernels.ops.dispatch_paths()`` when the suite exercised kernels."""
+    import jax
+
+    devices = jax.devices()
+    meta = {
+        "git_sha": _git_sha(repo_dir),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else "none",
+        "device_count": len(devices),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+    }
+    if timestamp is not None:
+        meta["timestamp"] = timestamp
+    if dispatch_paths is not None:
+        meta["dispatch_paths"] = dict(dispatch_paths)
+    return meta

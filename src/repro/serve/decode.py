@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
+from repro.obs.metrics import MetricsRegistry
 
 
 def make_serve_step(cfg, plan=None, dual_branch=False):
@@ -81,14 +82,15 @@ class ContinuousBatcher:
 
     The seed engine is single-program too — ONE (B, 1) dispatch per tick —
     but every lane advances exactly one token, so prompts prefill one
-    dispatch per token.  The paged engine's mixed tick
-    (``scheduler.EngineConfig.mixed_ticks``) keeps the one-dispatch-per-tick
-    property while letting prefilling lanes advance a whole chunk;
-    ``stats()`` reports the same ``dispatches_per_tick`` / occupancy fields
-    on both engines so the comparison is direct."""
+    dispatch per token.  The paged engine's mixed tick keeps the
+    one-dispatch-per-tick property while letting prefilling lanes advance a
+    whole chunk; ``stats()`` reports the same ``dispatches_per_tick`` /
+    occupancy fields on both engines (both routed through a
+    ``repro.obs.MetricsRegistry``) so the comparison is direct."""
 
     def __init__(self, cfg, params, batch_slots: int, max_seq: int,
-                 cache_dtype="float32", plan=None, dual_branch=False):
+                 cache_dtype="float32", plan=None, dual_branch=False,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg, self.params = cfg, params
         self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.DECODE)
         if dual_branch:
@@ -99,9 +101,14 @@ class ContinuousBatcher:
         self.serve_step = jax.jit(make_serve_step(cfg, self.plan))
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
-        self.ticks = 0
-        self.dispatches = 0
-        self._occ = []                 # active lanes / slots, per dispatch
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        site = "serve/decode.py"
+        self._c_ticks = self.metrics.counter(
+            "batcher_ticks_total", unit="ticks", site=site)
+        self._c_dispatches = self.metrics.counter(
+            "batcher_dispatches_total", unit="calls", site=site)
+        self._h_occ = self.metrics.histogram(
+            "batcher_occupancy", unit="ratio", site=site)
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -114,9 +121,9 @@ class ContinuousBatcher:
     def step(self):
         """One engine tick: feed each active slot its next token."""
         self._fill_slots()
-        self.ticks += 1
-        self.dispatches += 1
-        self._occ.append(sum(r is not None for r in self.slots) / self.B)
+        self._c_ticks.inc()
+        self._c_dispatches.inc()
+        self._h_occ.record(sum(r is not None for r in self.slots) / self.B)
         toks = np.zeros((self.B, 1), np.int32)
         pos = np.zeros((self.B,), np.int32)
         for i, r in enumerate(self.slots):
@@ -150,13 +157,21 @@ class ContinuousBatcher:
         return done
 
     def reset_stats(self):
-        self.ticks = self.dispatches = 0
-        self._occ.clear()
+        self.metrics.reset()
+
+    @property
+    def ticks(self) -> int:
+        return self._c_ticks.value
+
+    @property
+    def dispatches(self) -> int:
+        return self._c_dispatches.value
 
     def stats(self) -> dict:
         return {
             "ticks": self.ticks,
             "dispatches": self.dispatches,
             "dispatches_per_tick": self.dispatches / max(self.ticks, 1),
-            "mean_occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
+            "mean_occupancy": self._h_occ.mean,
+            "metrics": self.metrics.to_dict(),
         }

@@ -19,9 +19,14 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over pages 1..num_pages-1 (page 0 = scratch)."""
+    """Free-list allocator over pages 1..num_pages-1 (page 0 = scratch).
 
-    def __init__(self, num_pages: int, page_size: int):
+    ``metrics`` (optional ``repro.obs.MetricsRegistry``) mirrors the
+    bookkeeping into the observability layer: ``pages_alloc_total`` /
+    ``pages_free_total`` counters and a ``pages_in_use`` gauge, so page
+    pressure shows up next to the engine's latency series."""
+
+    def __init__(self, num_pages: int, page_size: int, metrics=None):
         assert num_pages >= 2, "need >= 1 allocatable page + scratch page 0"
         self.num_pages = num_pages
         self.page_size = page_size
@@ -29,6 +34,14 @@ class PageAllocator:
         self.n_allocs = 0
         self.n_frees = 0
         self.peak_in_use = 0
+        self.metrics = metrics
+
+    def _observe(self):
+        if self.metrics is None:
+            return
+        site = "serve/paged_cache.py"
+        self.metrics.gauge("pages_in_use", unit="pages",
+                           site=site).set(self.in_use)
 
     @property
     def capacity(self) -> int:
@@ -52,6 +65,10 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         self.n_allocs += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
+        if self.metrics is not None:
+            self.metrics.counter("pages_alloc_total", unit="pages",
+                                 site="serve/paged_cache.py").inc(n)
+            self._observe()
         return pages
 
     def free(self, pages: List[int]) -> None:
@@ -59,6 +76,10 @@ class PageAllocator:
             assert 0 < pg < self.num_pages, pg
         self._free.extend(pages)
         self.n_frees += len(pages)
+        if self.metrics is not None:
+            self.metrics.counter("pages_free_total", unit="pages",
+                                 site="serve/paged_cache.py").inc(len(pages))
+            self._observe()
 
     def stats(self) -> dict:
         return {

@@ -62,7 +62,7 @@ def _sample_one(logits, temp, top_k, top_p, seed, pos):
     return jnp.where(temp <= 0.0, greedy, sampled).astype(jnp.int32)
 
 
-# one request; composable into larger jitted programs (serve/prefill.py)
+# one request; composable into larger jitted programs (serve/scheduler.py)
 sample_one = _sample_one
 
 # sample_tokens(logits (B,V), temps (B,), top_ks (B,), top_ps (B,),

@@ -6,18 +6,15 @@ engine with:
   * admission control — a request enters a slot only when the page pool can
     cover its context (policy 'prompt': prompt + 1 token; 'full': prompt +
     max_new, no-preemption reservation);
-  * MIXED ticks (``EngineConfig.mixed_ticks``, the default) — the engine
-    compiles exactly ONE jitted (slots, prefill_chunk) program
-    (``make_paged_step``) and issues ONE dispatch per tick that serves lanes
-    at ANY phase: prefilling lanes advance up to ``prefill_chunk`` prompt
-    tokens while decoding lanes advance 1 sampled token in the SAME call
-    (per-lane ``pos``/``n_valid`` vectors mask the rest; the chunked
-    block-table kernel ``kernels.ops.paged_chunk_attention`` serves the
-    attention).  Decode lanes are never head-of-line blocked behind a
-    prefill dispatch, and per-tick dispatch overhead is paid once;
-  * the retired two-program path (``mixed_ticks=False``, one release) —
-    a (slots, prefill_chunk) prefill call then a (slots, 1) decode call
-    per tick, two jitted programs;
+  * MIXED ticks — the engine compiles exactly ONE jitted
+    (slots, prefill_chunk) program (``make_paged_step``) and issues ONE
+    dispatch per tick that serves lanes at ANY phase: prefilling lanes
+    advance up to ``prefill_chunk`` prompt tokens while decoding lanes
+    advance 1 sampled token in the SAME call (per-lane ``pos``/``n_valid``
+    vectors mask the rest; the chunked block-table kernel
+    ``kernels.ops.paged_chunk_attention`` serves the attention).  Decode
+    lanes are never head-of-line blocked behind a prefill dispatch, and
+    per-tick dispatch overhead is paid once;
   * per-request seeded sampling (serve/sampling.py) fused into the tick's
     dispatch;
   * preemption by page pressure — when a slot can't grow its block table,
@@ -31,19 +28,24 @@ engine with:
     connections the steady-state blocks issue the MLP branch off the cached
     per-slot FAL signal concurrently with the paged attention gather
     (MHA||MLP, the paper's inference-side claim); bit-identical tokens.
-    The C == 1 fused Pallas dual dispatch only exists on the two-program
-    path's decode tick; under mixed ticks the branches overlap at op level.
 
 The oldest active request can always claim pages from younger ones, so the
 engine makes progress whenever any single request fits the pool; requests
 that can never fit are rejected instead of deadlocking the queue.
 
-``stats()`` reports ``dispatches_per_tick`` and ``mean_occupancy`` (active
-lanes / slots per dispatch) so the mixed-tick fusion is observable.
+Observability (``repro.obs``): the engine owns a ``MetricsRegistry`` —
+TTFT, inter-token latency, queue wait, occupancy, page utilization and
+preemptions are recorded as typed series and surfaced by ``stats()``
+(p50/p99 summaries + the full registry dump under ``"metrics"``).  Pass a
+``Tracer`` to additionally capture per-tick spans, per-dispatch spans
+(wrapped in ``jax.profiler.TraceAnnotation`` so XLA device profiles line
+up) and per-request lifecycle events (QUEUED -> ADMITTED -> PREFILL ->
+DECODE -> PREEMPTED/requeued -> FINISHED) as Chrome trace-event JSON.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -52,8 +54,12 @@ import numpy as np
 
 from repro.core.plan import ExecutionPlan, Phase
 from repro.models import model as M
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serve import sampling as SP
 from repro.serve.paged_cache import BlockTable, PageAllocator, pages_needed
+
+_SITE = "serve/scheduler.py"
 
 
 # --------------------------------------------------------------------------- #
@@ -69,20 +75,19 @@ def make_paged_step(cfg, plan=None):
     and applies the LM head to the (B, 1, D) gather — 1/C of the tick's
     dominant matmul compared to a full (B, C, V) head.
 
-    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the primary (and only
-    non-deprecated) way to configure the dispatch; its phase is pinned to
-    paged here.  ``plan.dual_branch`` selects the MHA||MLP branch-parallel
-    block for the steady-state layers (fal/parallel-family connections;
-    validated), overlapping each block's paged KV gather with its FFN off
-    the cached per-slot first-attention signal.  The returned callable is
+    ``plan`` is a typed ``core.plan.ExecutionPlan`` — the only way to
+    configure the dispatch; its phase is pinned to paged here.
+    ``plan.dual_branch`` selects the MHA||MLP branch-parallel block for the
+    steady-state layers (fal/parallel-family connections; validated),
+    overlapping each block's paged KV gather with its FFN off the cached
+    per-slot first-attention signal.  The returned callable is
     phase-agnostic per LANE: lane b advances ``n_valid[b]`` tokens from its
     own position ``pos[b]`` — a mixed tick calls it once at C ==
     prefill_chunk with prefilling lanes at n_valid up to C and decoding
-    lanes at n_valid == 1 (ONE trace, ONE dispatch per tick); the legacy
-    two-program engine calls it at C == chunk then C == 1 (two traces,
-    cached by shape).  Sampling is fused into the program (no extra
-    dispatch) and the cache buffers are donated, so page pools update in
-    place instead of being copied every tick.
+    lanes at n_valid == 1 (ONE trace, ONE dispatch per tick).  Sampling is
+    fused into the program (no extra dispatch) and the cache buffers are
+    donated, so page pools update in place instead of being copied every
+    tick.
     """
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
     plan.validate(cfg)
@@ -139,6 +144,11 @@ class ServeRequest:
     arrival: int = -1                  # submit order (preemption priority)
     submit_tick: int = -1
     finish_tick: int = -1
+    # observability (wall clocks are time.perf_counter seconds)
+    submit_time: float = 0.0
+    queued_tick: int = -1              # last (re-)queue tick, for queue wait
+    last_token_time: float = 0.0
+    decoding: bool = False             # per-residency phase (reset on preempt)
 
     def known(self) -> list:
         """Context to teacher-force: prompt + everything sampled so far."""
@@ -162,17 +172,19 @@ class EngineConfig:
     # is tolerance-close); the win is overlap of the paged KV gather with
     # the FFN matmuls.
     dual_branch: bool = False
-    # ONE mixed (slots, prefill_chunk) dispatch per tick serving lanes at
-    # any phase (the default).  False keeps the retired two-program
-    # prefill-then-decode tick for one release.
-    mixed_ticks: bool = True
 
 
 class PagedEngine:
-    """Slot-based continuous batching over paged KV (decoder family)."""
+    """Slot-based continuous batching over paged KV (decoder family).
+
+    ``metrics``: a ``repro.obs.MetricsRegistry`` (one is created per engine
+    when omitted — benchmarks driving several engines keep their series
+    separate).  ``tracer``: a ``repro.obs.Tracer``; the default NULL tracer
+    records nothing and costs one no-op context per span site."""
 
     def __init__(self, cfg, params, engine_cfg: EngineConfig = EngineConfig(),
-                 plan=None):
+                 plan=None, metrics: Optional[MetricsRegistry] = None,
+                 tracer=None):
         if cfg.family not in M.PAGED_FAMILIES:
             raise NotImplementedError(cfg.family)
         if cfg.n_image_tokens:
@@ -184,6 +196,8 @@ class PagedEngine:
                 "need image_embeds plumbed through ServeRequest")
         assert engine_cfg.admission in ("prompt", "full"), engine_cfg.admission
         self.cfg, self.params, self.ecfg = cfg, params, engine_cfg
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # the engine stores a typed plan, not a context dict; every jitted
         # dispatch it compiles runs under this plan with phase=paged
         self.plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
@@ -197,28 +211,65 @@ class PagedEngine:
             engine_cfg.slots, engine_cfg.cache_dtype)
         self.step_fn = make_paged_step(cfg, self.plan)
         self.allocator = PageAllocator(engine_cfg.num_pages,
-                                       engine_cfg.page_size)
+                                       engine_cfg.page_size,
+                                       metrics=self.metrics)
         self.tables = [BlockTable(self.allocator, self.max_blocks)
                        for _ in range(engine_cfg.slots)]
         self.slots: List[Optional[ServeRequest]] = [None] * engine_cfg.slots
         self.queue: List[ServeRequest] = []
         self.finished: List[ServeRequest] = []
         self.ticks = 0
-        self.prefill_calls = self.decode_calls = self.mixed_calls = 0
+        self.mixed_calls = 0
         self.dispatches = 0
         self.dispatch_ticks = 0        # ticks that issued >= 1 dispatch
-        self.prefill_tokens = self.decode_tokens = 0
-        self.preemptions = self.rejected = 0
         self._arrival = 0
-        self._util = []
-        self._occ = []                 # active lanes / slots, per dispatch
+        # registered up front so reset()/export enumerate a stable set
+        self._c_ticks = self.metrics.counter(
+            "engine_ticks_total", unit="ticks", site=_SITE)
+        self._c_dispatches = self.metrics.counter(
+            "engine_dispatches_total", unit="calls", site=_SITE)
+        self._c_mixed = self.metrics.counter(
+            "engine_mixed_calls_total", unit="calls", site=_SITE)
+        self._c_prefill_toks = self.metrics.counter(
+            "engine_prefill_tokens_total", unit="tokens", site=_SITE)
+        self._c_decode_toks = self.metrics.counter(
+            "engine_decode_tokens_total", unit="tokens", site=_SITE)
+        self._c_preempt = self.metrics.counter(
+            "engine_preemptions_total", unit="events", site=_SITE)
+        self._c_rejected = self.metrics.counter(
+            "engine_rejected_total", unit="events", site=_SITE)
+        self._c_admitted = self.metrics.counter(
+            "engine_admitted_total", unit="events", site=_SITE)
+        self._c_finished = self.metrics.counter(
+            "engine_finished_total", unit="events", site=_SITE)
+        self._h_occ = self.metrics.histogram(
+            "engine_occupancy", unit="ratio", site=_SITE)
+        self._h_util = self.metrics.histogram(
+            "engine_page_utilization", unit="ratio", site=_SITE)
+        self._h_queue_wait = self.metrics.histogram(
+            "engine_queue_wait_ticks", unit="ticks", site=_SITE)
+        self._h_ttft_ms = self.metrics.histogram(
+            "engine_ttft_ms", unit="ms", site=_SITE)
+        self._h_ttft_ticks = self.metrics.histogram(
+            "engine_ttft_ticks", unit="ticks", site=_SITE)
+        self._h_itl_ms = self.metrics.histogram(
+            "engine_inter_token_ms", unit="ms", site=_SITE)
+        self._h_req_ticks = self.metrics.histogram(
+            "engine_request_latency_ticks", unit="ticks", site=_SITE)
+        self._h_dispatch_ms = self.metrics.histogram(
+            "engine_dispatch_ms", unit="ms", site=_SITE)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest):
         req.arrival = self._arrival
         self._arrival += 1
         req.submit_tick = self.ticks
+        req.queued_tick = self.ticks
+        req.submit_time = time.perf_counter()
         self.queue.append(req)
+        self.tracer.begin_async("req", req.rid, prompt_len=len(req.prompt),
+                                max_new=req.max_new)
+        self.tracer.instant("QUEUED", rid=req.rid)
 
     def _admission_pages(self, r: ServeRequest) -> int:
         ctx = len(r.known())
@@ -230,8 +281,10 @@ class PagedEngine:
     def _reject(self, r: ServeRequest):
         r.done = r.truncated = True
         r.finish_tick = self.ticks
-        self.rejected += 1
+        self._c_rejected.inc()
         self.finished.append(r)
+        self.tracer.instant("REJECTED", rid=r.rid)
+        self.tracer.end_async("req", r.rid, outcome="rejected")
 
     def _admit(self):
         while self.queue:
@@ -255,7 +308,14 @@ class PagedEngine:
                 return                       # FCFS: no head-of-line skipping
             self.queue.pop(0)
             r.pos = 0                        # (re-)prefill from scratch
+            r.decoding = False
             self.slots[free] = r
+            self._c_admitted.inc()
+            self._h_queue_wait.record(self.ticks - r.queued_tick)
+            self.tracer.instant("ADMITTED", rid=r.rid, slot=free,
+                                wait_ticks=self.ticks - r.queued_tick)
+            self.tracer.instant("PREFILL", rid=r.rid, slot=free,
+                                context=ctx)
             if self.ecfg.admission == "full":
                 # reservation policy: actually hold the worst-case pages now
                 # so this request can never be preempted for page pressure
@@ -269,10 +329,14 @@ class PagedEngine:
         r = self.slots[i]
         self.tables[i].release()
         r.pos = 0
+        r.decoding = False
         r.preemptions += 1
-        self.preemptions += 1
+        r.queued_tick = self.ticks
+        self._c_preempt.inc()
         self.slots[i] = None
         self.queue.insert(0, r)              # front: resumes before new work
+        self.tracer.instant("PREEMPTED", rid=r.rid, slot=i,
+                            generated=len(r.generated))
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         cands = [i for i, r in enumerate(self.slots)
@@ -307,6 +371,12 @@ class PagedEngine:
         self.tables[i].release()
         self.slots[i] = None
         self.finished.append(r)
+        self._c_finished.inc()
+        self._h_req_ticks.record(r.finish_tick - r.submit_tick)
+        self.tracer.instant("FINISHED", rid=r.rid, truncated=truncated,
+                            generated=len(r.generated))
+        self.tracer.end_async(
+            "req", r.rid, outcome="truncated" if truncated else "finished")
 
     # ------------------------------------------------------------------ #
     def _run_call(self, ids: List[int], chunk: int):
@@ -316,7 +386,8 @@ class PagedEngine:
         advances min(chunk, its remaining context) tokens."""
         B = self.ecfg.slots
         self.dispatches += 1
-        self._occ.append(len(ids) / B)
+        self._c_dispatches.inc()
+        self._h_occ.record(len(ids) / B)
         lists = [self.slots[i].known()[self.slots[i].pos:
                                        self.slots[i].pos + chunk]
                  if i in ids else [] for i in range(B)]
@@ -335,26 +406,41 @@ class PagedEngine:
             # position of the would-be new token (== len(known()) exactly
             # when this call completes the request's context)
             poss[i] = self.slots[i].pos + int(n_valid[i])
-        _, nxt, self.cache = self.step_fn(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(n_valid), jnp.asarray(bt), jnp.asarray(temps),
-            jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds),
-            jnp.asarray(poss))
+        t0 = time.perf_counter()
+        with self.tracer.span("engine.dispatch", annotate=True,
+                              lanes=len(ids), chunk=chunk):
+            _, nxt, self.cache = self.step_fn(
+                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(n_valid), jnp.asarray(bt), jnp.asarray(temps),
+                jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds),
+                jnp.asarray(poss))
+        self._h_dispatch_ms.record((time.perf_counter() - t0) * 1e3)
         for i in ids:
             r = self.slots[i]
             adv = int(n_valid[i])
             if len(r.known()) - r.pos == 1:
-                self.decode_tokens += adv
+                self._c_decode_toks.inc(adv)
             else:
-                self.prefill_tokens += adv
+                self._c_prefill_toks.inc(adv)
             r.pos += adv
         need = [i for i in ids
                 if self.slots[i].pos == len(self.slots[i].known())]
         if need:
             nxt_np = np.asarray(nxt)
+            now = time.perf_counter()
             for i in need:
                 r = self.slots[i]
                 r.generated.append(int(nxt_np[i]))
+                if len(r.generated) == 1:
+                    self._h_ttft_ms.record((now - r.submit_time) * 1e3)
+                    self._h_ttft_ticks.record(self.ticks - r.submit_tick)
+                elif r.last_token_time:
+                    self._h_itl_ms.record((now - r.last_token_time) * 1e3)
+                r.last_token_time = now
+                if not r.decoding:
+                    r.decoding = True
+                    self.tracer.instant("DECODE", rid=r.rid, slot=i,
+                                        generated=len(r.generated))
                 if len(r.generated) >= r.max_new:
                     self._finish(i)
                 elif len(r.known()) >= self.ecfg.max_seq:
@@ -363,18 +449,16 @@ class PagedEngine:
     # ------------------------------------------------------------------ #
     def step(self):
         """One engine tick: admit, then ONE mixed dispatch serving every
-        active lane at its own phase (``mixed_ticks``), or the retired
-        chunked-prefill-call-then-decode-call pair."""
+        active lane at its own phase."""
         self.ticks += 1
-        self._admit()
-        d0 = self.dispatches
-        if self.ecfg.mixed_ticks:
+        self._c_ticks.inc()
+        with self.tracer.span("engine.tick", tick=self.ticks):
+            self._admit()
+            d0 = self.dispatches
             self._step_mixed()
-        else:
-            self._step_two_dispatch()
-        if self.dispatches > d0:
-            self.dispatch_ticks += 1
-        self._util.append(self.allocator.stats()["utilization"])
+            if self.dispatches > d0:
+                self.dispatch_ticks += 1
+            self._h_util.record(self.allocator.stats()["utilization"])
 
     def _step_mixed(self):
         """ONE (slots, prefill_chunk) dispatch: prefilling lanes advance up
@@ -390,38 +474,8 @@ class PagedEngine:
         ids = [i for i, r in enumerate(self.slots) if r is not None]
         if ids:
             self.mixed_calls += 1
+            self._c_mixed.inc()
             self._run_call(ids, chunk)
-
-    def _step_two_dispatch(self):
-        """Retired path (one release, ``mixed_ticks=False``): a chunked
-        prefill call then a decode call — decode lanes sit idle during the
-        prefill dispatch and vice versa."""
-        def remaining(r):
-            return len(r.known()) - r.pos
-
-        pre = [i for i, r in enumerate(self.slots)
-               if r is not None and remaining(r) > 1]
-        for i in list(pre):
-            r = self.slots[i]
-            feed = min(self.ecfg.prefill_chunk, remaining(r))
-            if not self._ensure(i, r.pos + feed):
-                pass                          # slot preempted/truncated
-        pre = [i for i, r in enumerate(self.slots)
-               if r is not None and remaining(r) > 1]
-        if pre:
-            self.prefill_calls += 1
-            self._run_call(pre, self.ecfg.prefill_chunk)
-
-        dec = [i for i, r in enumerate(self.slots)
-               if r is not None and remaining(r) == 1]
-        for i in list(dec):
-            if not self._ensure(i, self.slots[i].pos + 1):
-                pass
-        dec = [i for i, r in enumerate(self.slots)
-               if r is not None and remaining(r) == 1]
-        if dec:
-            self.decode_calls += 1
-            self._run_call(dec, 1)
 
     def run(self, max_ticks: Optional[int] = None) -> List[ServeRequest]:
         while any(s is not None for s in self.slots) or self.queue:
@@ -432,43 +486,60 @@ class PagedEngine:
 
     # ------------------------------------------------------------------ #
     def reset_stats(self):
-        """Zero every counter/sample while keeping compiled programs, live
-        requests and page state (benchmarks call this after warmup)."""
+        """Zero every counter/series (and drop buffered trace events) while
+        keeping compiled programs, live requests and page state (benchmarks
+        call this after warmup)."""
         self.ticks = 0
-        self.prefill_calls = self.decode_calls = self.mixed_calls = 0
+        self.mixed_calls = 0
         self.dispatches = self.dispatch_ticks = 0
-        self.prefill_tokens = self.decode_tokens = 0
-        self.preemptions = self.rejected = 0
-        self._util.clear()
-        self._occ.clear()
+        self.metrics.reset()
+        self.tracer.clear()
         self.allocator.peak_in_use = self.allocator.in_use
 
     def stats(self) -> dict:
         frag = sum(self.tables[i].internal_fragmentation(self.slots[i].pos)
                    for i in range(self.ecfg.slots)
                    if self.slots[i] is not None)
+
+        def pcts(h):
+            return {"p50": h.percentile(50), "p99": h.percentile(99),
+                    "mean": h.mean, "count": h.count}
+
         return {
             "ticks": self.ticks,
-            "prefill_calls": self.prefill_calls,
-            "decode_calls": self.decode_calls,
             "mixed_calls": self.mixed_calls,
             "dispatches": self.dispatches,
             "dispatch_ticks": self.dispatch_ticks,
             # the tentpole metric, over ticks that issued any dispatch (a
             # tick whose only lane was truncated/preempted mid-growth
-            # legitimately issues none): EXACTLY 1.0 under mixed ticks, up
-            # to 2.0 on the retired two-program path
+            # legitimately issues none): EXACTLY 1.0 under mixed ticks
             "dispatches_per_tick":
                 self.dispatches / max(self.dispatch_ticks, 1),
             # active lanes per dispatch / slots: mixed ticks keep every
             # occupied lane advancing in every dispatch
-            "mean_occupancy": float(np.mean(self._occ)) if self._occ else 0.0,
-            "prefill_tokens": self.prefill_tokens,
-            "decode_tokens": self.decode_tokens,
-            "preemptions": self.preemptions,
-            "rejected": self.rejected,
-            "mean_page_utilization": float(np.mean(self._util)) if self._util
-            else 0.0,
+            "mean_occupancy": self._h_occ.mean,
+            "prefill_tokens": self._c_prefill_toks.value,
+            "decode_tokens": self._c_decode_toks.value,
+            "preemptions": self._c_preempt.value,
+            "rejected": self._c_rejected.value,
+            "mean_page_utilization": self._h_util.mean,
             "internal_fragmentation": frag,
             "pages": self.allocator.stats(),
+            # request-lifecycle latency summaries (the registry is the
+            # source of truth; these are the headline cuts)
+            "ttft_ms": pcts(self._h_ttft_ms),
+            "ttft_ticks": pcts(self._h_ttft_ticks),
+            "inter_token_ms": pcts(self._h_itl_ms),
+            "queue_wait_ticks": pcts(self._h_queue_wait),
+            "request_latency_ticks": pcts(self._h_req_ticks),
+            "dispatch_ms": pcts(self._h_dispatch_ms),
+            "metrics": self.metrics.to_dict(),
         }
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preempt.value
+
+    @property
+    def rejected(self) -> int:
+        return self._c_rejected.value

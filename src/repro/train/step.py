@@ -29,7 +29,7 @@ def make_train_step(cfg, ocfg: adamw.AdamWConfig, plan=None,
     state = {"params", "opt"}.  ``batch["tokens"]``: (B, S); B is split into
     ``num_microbatches`` sequential microbatches (lax.scan) with gradient
     accumulation — bounds activation (and MoE dispatch-buffer) memory.
-    ``plan`` (ExecutionPlan; legacy parallel-ctx dicts are shimmed) flows
+    ``plan`` (ExecutionPlan) flows
     unchanged into the model: with ``tp='explicit'`` the decoder family's
     loss/grad run through the shard_map partial-sum TP stack
     (model.decoder_stack_tp) — the paper's per-block collective structure —

@@ -1,4 +1,11 @@
-"""Training loop driver: data -> jitted train_step -> logging/eval/ckpt."""
+"""Training loop driver: data -> jitted train_step -> logging/eval/ckpt.
+
+Per-step metrics flow through the same ``repro.obs.MetricsRegistry`` the
+serving engines report into: every logged scalar from the jitted step
+(loss, grad_norm, ...) lands in a gauge, step wall time in a log-bucket
+histogram, so a training run exports the identical JSON/Prometheus shapes
+as a serving run and the benchmark harness stamps both the same way.
+"""
 from __future__ import annotations
 
 import time
@@ -8,17 +15,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import SyntheticMarkov
+from repro.obs.metrics import MetricsRegistry
 from repro.optim import adamw, schedules
 from repro.train import checkpoint as ckpt
 from repro.train import step as tstep
+
+_SITE = "train/trainer.py"
 
 
 def train(cfg, *, steps=200, batch=8, seq_len=128, lr=3e-4, seed=0,
           plan=None, num_microbatches=1, log_every=20,
           eval_every=0, ckpt_dir=None, data=None, schedule="cosine",
-          in_shardings=None, callbacks=()):
-    """Returns (state, history).  ``plan``: ExecutionPlan (or legacy
-    parallel-ctx dict, shimmed) selecting the mesh/TP/SP layout."""
+          in_shardings=None, callbacks=(), metrics=None):
+    """Returns (state, history).  ``plan``: ExecutionPlan selecting the
+    mesh/TP/SP layout.  ``metrics``: a ``repro.obs.MetricsRegistry`` to
+    record into (one is created per run when omitted; read it back via
+    ``history`` consumers or pass a shared registry)."""
+    reg = metrics if metrics is not None else MetricsRegistry()
+    c_steps = reg.counter("train_steps_total", unit="steps", site=_SITE)
+    c_tokens = reg.counter("train_tokens_total", unit="tokens", site=_SITE)
+    h_step_ms = reg.histogram("train_step_ms", unit="ms", site=_SITE)
     sched = {"cosine": schedules.warmup_cosine,
              "onecycle": schedules.one_cycle,
              "wsd": schedules.wsd}[schedule](lr, steps)
@@ -33,11 +49,19 @@ def train(cfg, *, steps=200, batch=8, seq_len=128, lr=3e-4, seed=0,
     it = iter(data)
     history = []
     t0 = time.time()
+    t_prev = time.perf_counter()
     for i in range(steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
-        state, metrics = step_fn(state, b)
+        state, metrics_out = step_fn(state, b)
+        t_now = time.perf_counter()
+        c_steps.inc()
+        c_tokens.inc(int(np.prod(b["tokens"].shape)))
+        h_step_ms.record((t_now - t_prev) * 1e3)
+        t_prev = t_now
         if (log_every and i % log_every == 0) or i == steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
+            m = {k: float(v) for k, v in metrics_out.items()}
+            for k, v in m.items():
+                reg.gauge(f"train_{k}", site=_SITE).set(v)
             m.update(step=i, wall=time.time() - t0)
             history.append(m)
             if log_every:
@@ -47,9 +71,10 @@ def train(cfg, *, steps=200, batch=8, seq_len=128, lr=3e-4, seed=0,
         if eval_every and i and i % eval_every == 0:
             eb = {k: jnp.asarray(v) for k, v in data.batch_at(10**6 + i).items()}
             em = eval_fn(state["params"], eb)
+            reg.gauge("train_eval_ppl", site=_SITE).set(float(em["ppl"]))
             print(f"  eval ppl {float(em['ppl']):.3f}", flush=True)
         for cb in callbacks:
-            cb(i, state, metrics)
+            cb(i, state, metrics_out)
     if ckpt_dir:
         ckpt.save(ckpt_dir, state, step=steps,
                   meta={"arch": cfg.arch_id, "connection": cfg.connection})

@@ -218,12 +218,6 @@ def test_engine_rejects_dual_branch_with_preln():
         PagedEngine(cfg, params, EngineConfig(dual_branch=True))
 
 
-def test_dual_plan_cannot_degrade_to_legacy_dict():
-    plan = ExecutionPlan.single_device(Phase.DECODE, dual_branch=True)
-    with pytest.raises(ValueError, match="cannot be expressed"):
-        plan.to_legacy_dict()
-
-
 # --------------------------------------------------------------------------- #
 # fused kernel dispatch
 # --------------------------------------------------------------------------- #

@@ -1,5 +1,6 @@
-"""ExecutionPlan (core/plan.py): construction, validation errors, the
-legacy parallel-ctx dict shim, and SP-vs-replicated logits equivalence.
+"""ExecutionPlan (core/plan.py): construction, validation errors,
+rejection of the expired legacy-dict shim, and SP-vs-replicated logits
+equivalence.
 
 Validation unit tests use a lightweight fake mesh (validate only reads
 ``axis_names``/``shape``); the equivalence test spawns a subprocess with 2
@@ -103,48 +104,20 @@ def test_validate_sp_needs_explicit_tp_and_full_sequence():
         cfg_for(n_kv_heads=4))
 
 
-# ------------------------------------------------------------- legacy shim --
-def test_legacy_dict_round_trip():
-    mesh = fake_mesh(data=2, model=4)
-    plan = ExecutionPlan.from_mesh(mesh, tp="explicit")
-    with pytest.warns(DeprecationWarning):
-        back = ExecutionPlan.from_legacy_dict(plan.to_legacy_dict())
-    assert back == plan
-    # inner (shard_map-local) plans round-trip too
-    inner = plan.inner()
-    with pytest.warns(DeprecationWarning):
-        back = ExecutionPlan.from_legacy_dict(inner.to_legacy_dict())
-    assert back.tp_axis == "model" and back.tp_size == 4
-
-
-def test_legacy_dict_via_resolve_and_unknown_keys():
+# ---------------------------------------------------- expired legacy shim --
+def test_resolve_rejects_context_dicts():
+    """The one-release legacy parallel-ctx dict shim has expired: resolve()
+    must fail loudly on a dict (pointing at the replacement), never
+    silently coerce it."""
     mesh = fake_mesh(data=2, model=4)
     legacy = {"mesh": mesh, "data_axes": ("data",), "model_axis": "model",
               "tp": "explicit"}
-    with pytest.warns(DeprecationWarning):
-        p = ExecutionPlan.resolve(legacy)
-    assert p.use_explicit_tp and p.data_axes == ("data",)
-    # the old (mode, parallel_ctx) positional call shape
-    with pytest.warns(DeprecationWarning):
-        p = ExecutionPlan.resolve("prefill", legacy)
-    assert p.phase is Phase.PREFILL and p.tp is TPStyle.EXPLICIT
-    with pytest.raises(ValueError, match="unknown keys"):
-        with pytest.warns(DeprecationWarning):
-            ExecutionPlan.from_legacy_dict({"mesh": mesh, "typo": 1})
-
-
-def test_resolve_rejects_plan_plus_legacy():
-    with pytest.raises(ValueError, match="not both"):
-        ExecutionPlan.resolve(ExecutionPlan.single_device(), {"mesh": None})
-
-
-def test_legacy_dict_cannot_express_sp():
-    """A legacy dict has no SP slot — exporting must raise, not silently
-    degrade to the replicated layout."""
-    mesh = fake_mesh(model=4)
-    plan = ExecutionPlan.from_mesh(mesh, tp="explicit", sp=True)
-    with pytest.raises(ValueError, match="cannot be expressed"):
-        plan.to_legacy_dict()
+    with pytest.raises(TypeError, match="no longer accepted"):
+        ExecutionPlan.resolve(legacy)
+    with pytest.raises(TypeError, match="no longer accepted"):
+        ExecutionPlan.resolve({})
+    assert not hasattr(ExecutionPlan, "from_legacy_dict")
+    assert not hasattr(ExecutionPlan, "to_legacy_dict")
 
 
 # ------------------------------------------- SP == replicated (2 devices) --

@@ -198,8 +198,7 @@ def test_mixed_tick_engine_matches_dense_oracle(prompt_lens, seed):
         return toks[len(prompt):]
 
     eng = PagedEngine(cfg, params, EngineConfig(
-        page_size=8, num_pages=5, slots=3, prefill_chunk=8, max_seq=64,
-        mixed_ticks=True))
+        page_size=8, num_pages=5, slots=3, prefill_chunk=8, max_seq=64))
     for i, p in enumerate(prompts):
         eng.submit(ServeRequest(rid=i, prompt=p, max_new=max_new))
     done = {r.rid: r for r in eng.run()}

@@ -2,7 +2,7 @@
 invariance, FAL-signal caching, preemption->resume determinism, sampling
 reproducibility, dual-branch (MHA||MLP) continuous batching, MIXED ticks
 (one (slots, C) dispatch per engine step serving prefill + decode lanes
-together, token streams identical to the two-dispatch engine), and
+together, token streams invariant to the compiled chunk width), and
 allocator bookkeeping."""
 import jax
 import jax.numpy as jnp
@@ -244,11 +244,11 @@ def test_paged_a1_sig_kept_for_inactive_slots():
 SIX_STYLES = ("preln", "parallel", "fal", "falplus", "ablation1", "ablation2")
 
 
-def _engine_tokens(cfg, params, mixed, *, num_pages=48, n=6, slots=4,
-                   dual=False):
+def _engine_tokens(cfg, params, *, num_pages=48, n=6, slots=4,
+                   dual=False, chunk=8):
     eng = PagedEngine(cfg, params, EngineConfig(
-        page_size=8, num_pages=num_pages, slots=slots, prefill_chunk=8,
-        max_seq=64, mixed_ticks=mixed, dual_branch=dual))
+        page_size=8, num_pages=num_pages, slots=slots, prefill_chunk=chunk,
+        max_seq=64, dual_branch=dual))
     for r in _reqs(cfg, n=n):
         eng.submit(r)
     done = eng.run()
@@ -257,19 +257,20 @@ def _engine_tokens(cfg, params, mixed, *, num_pages=48, n=6, slots=4,
 
 
 @pytest.mark.parametrize("conn", SIX_STYLES)
-def test_mixed_tick_matches_two_dispatch_styles(conn):
-    """Mixed-tick token streams must be identical to the two-dispatch
-    engine's for every connection style (the engine-level serving
-    invariant), with exactly one dispatch per tick."""
+def test_mixed_tick_chunk_invariance_styles(conn):
+    """Token streams must be invariant to the compiled chunk width for
+    every connection style — a chunk=1 engine compiles a (slots, 1)
+    program (pure token-at-a-time, the seed semantics), a chunk=8 engine
+    a (slots, 8) mixed program; both must emit identical tokens with
+    exactly one dispatch per tick."""
     cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    two, _ = _engine_tokens(cfg, params, mixed=False)
-    mix, eng = _engine_tokens(cfg, params, mixed=True)
-    assert mix == two, conn
+    narrow, _ = _engine_tokens(cfg, params, chunk=1)
+    mix, eng = _engine_tokens(cfg, params, chunk=8)
+    assert mix == narrow, conn
     st = eng.stats()
     assert st["dispatches"] == st["ticks"] == st["mixed_calls"]
     assert st["dispatches_per_tick"] == 1.0
-    assert st["prefill_calls"] == st["decode_calls"] == 0
 
 
 @pytest.mark.parametrize("arch,family", [
@@ -277,7 +278,7 @@ def test_mixed_tick_matches_two_dispatch_styles(conn):
     ("deepseek-v3-671b", "moe"),           # MLA latent pages ride mixed too
     ("llava-next-mistral-7b", "vlm"),
 ])
-def test_mixed_tick_matches_two_dispatch_families(arch, family):
+def test_mixed_tick_chunk_invariance_families(arch, family):
     """Same engine-level invariant across the decoder families (vlm served
     text-only — the engine's request plumbing contract)."""
     cfg = get_config(arch).reduced().replace(connection="fal")
@@ -285,40 +286,40 @@ def test_mixed_tick_matches_two_dispatch_families(arch, family):
         cfg = cfg.replace(n_image_tokens=0)
     assert cfg.family == family
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    two, _ = _engine_tokens(cfg, params, mixed=False, n=4)
-    mix, eng = _engine_tokens(cfg, params, mixed=True, n=4)
-    assert mix == two, arch
+    narrow, _ = _engine_tokens(cfg, params, chunk=1, n=4)
+    mix, eng = _engine_tokens(cfg, params, chunk=8, n=4)
+    assert mix == narrow, arch
     assert eng.stats()["dispatches_per_tick"] == 1.0
 
 
-def test_mixed_tick_preemption_resume_matches_two_dispatch():
+def test_mixed_tick_preemption_resume_chunk_invariant():
     """Page pressure under mixed ticks: preempted/re-admitted requests must
-    still produce exactly the two-dispatch engine's tokens (position-derived
-    sampling keys + re-prefill make the resume deterministic)."""
+    still produce exactly the unconstrained chunk=1 engine's tokens
+    (position-derived sampling keys + re-prefill make the resume
+    deterministic)."""
     cfg, params = _cfg_params()
-    two, _ = _engine_tokens(cfg, params, mixed=False, num_pages=64, n=10)
-    mix, eng = _engine_tokens(cfg, params, mixed=True, num_pages=9, n=10)
+    narrow, _ = _engine_tokens(cfg, params, chunk=1, num_pages=64, n=10)
+    mix, eng = _engine_tokens(cfg, params, chunk=8, num_pages=9, n=10)
     assert eng.stats()["preemptions"] > 0      # pressure actually preempted
     assert eng.stats()["dispatches_per_tick"] == 1.0
-    assert mix == two
+    assert mix == narrow
 
 
 def test_mixed_tick_dual_branch_engine():
-    """dual_branch composes with mixed ticks (branch-parallel at op level;
-    the fused C == 1 Pallas dispatch belongs to the two-program path)."""
+    """dual_branch composes with mixed ticks (branch-parallel at op
+    level): same tokens, still one dispatch per tick."""
     cfg, params = _cfg_params()
-    seq, _ = _engine_tokens(cfg, params, mixed=True)
-    dual, eng = _engine_tokens(cfg, params, mixed=True, dual=True)
+    seq, _ = _engine_tokens(cfg, params)
+    dual, eng = _engine_tokens(cfg, params, dual=True)
     assert eng.plan.dual_branch
     assert eng.stats()["dispatches_per_tick"] == 1.0
     assert dual == seq
 
 
 def test_mixed_tick_compiles_one_program(monkeypatch):
-    """The tentpole contract, asserted via trace counting: the mixed engine
+    """The tentpole contract, asserted via trace counting: the engine
     traces its jitted step exactly ONCE — a single (slots, prefill_chunk)
-    program serves every tick — where the two-dispatch engine traces the
-    (slots, chunk) and (slots, 1) shapes."""
+    program serves every tick, whatever mix of phases the lanes are in."""
     cfg, params = _cfg_params()
     traces = []
     orig = M.paged_decode_step
@@ -329,14 +330,14 @@ def test_mixed_tick_compiles_one_program(monkeypatch):
 
     monkeypatch.setattr(M, "paged_decode_step", counting)
 
-    _, eng = _engine_tokens(cfg, params, mixed=True)
+    _, eng = _engine_tokens(cfg, params, chunk=8)
     assert traces == [(4, 8)], traces          # ONE trace: (slots, chunk)
     st = eng.stats()
     assert st["mixed_calls"] == st["ticks"] and st["dispatches_per_tick"] == 1
 
     traces.clear()
-    _engine_tokens(cfg, params, mixed=False)
-    assert sorted(traces) == [(4, 1), (4, 8)]  # two programs, one per phase
+    _engine_tokens(cfg, params, chunk=1)
+    assert traces == [(4, 1)], traces          # narrow engine: ONE program too
 
 
 def test_mixed_tick_occupancy_counts_active_lanes():
