@@ -4,15 +4,27 @@ latency percentiles (measured BY THE ENGINE's metrics registry, not
 recomputed bench-side), dispatches per tick, page utilization, preemption
 count.
 
-Two paged paths are timed against the seed engine on the IDENTICAL
-workload (same prompts, arrival ticks, generation lengths, greedy
-decoding):
+Every workload in the emitted JSON is LABELED — the seed engine is only a
+meaningful baseline on the prefill-bound poisson load (it dispatches once
+per token), so ``paged.speedup_vs_seed`` is reported under its label
+rather than read as a universal speedup.  The packed engine's own
+baseline is the padded reference layout, compared where it matters:
 
-  * ``mixed`` — the engine: ONE (slots, chunk) dispatch per tick serving
-    prefill and decode lanes together (the chunked block-table kernel).
-    Timed on a PREFILL-BURST load (heavier Poisson arrivals, so most ticks
-    carry both phases — the regime the fusion targets); the
-    ``dispatches_per_tick == 1`` contract is asserted here.
+  * ``paged`` (label ``poisson``) — ONE flat (token_budget,) dispatch per
+    tick serving prefill and decode lanes together as ragged segments
+    (the segment-aware block-table kernel), vs the seed token-by-token
+    engine on the IDENTICAL workload; ``dispatches_per_tick == 1``
+    asserted, ``tokens_per_dispatch`` / ``padding_fraction`` reported
+    next to tok/s.
+  * ``burst`` (label ``prefill-burst``) — heavier Poisson arrivals +
+    finer chunk, so most ticks carry both phases (the mixed-phase regime
+    the single dispatch targets).
+  * ``decode_heavy`` (label ``decode-heavy``) — short prompts, long
+    generations: most ticks are all-decode, where the padded layout burns
+    slots*chunk FLOPs to advance slots tokens.  The SAME workload is
+    driven through a padded-reference engine (the pre-packing layout,
+    defined HERE so src/repro/serve/ stays free of pad-out code) and CI
+    gates packed tok/s >= padded tok/s with identical token streams.
   * ``dual``  — (``--dual``) the dual-branch (MHA||MLP) engine: each
     steady-state block's FFN issued off the cached per-slot
     first-attention signal concurrently with the paged KV gather; asserts
@@ -60,7 +72,40 @@ from repro.kernels import ops
 from repro.models import model as M
 from repro.obs.trace import NULL_TRACER, Tracer, validate_chrome_trace
 from repro.serve.decode import ContinuousBatcher, Request
-from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+from repro.serve.scheduler import (EngineConfig, PackedTick, PagedEngine,
+                                   ServeRequest)
+
+
+class PaddedTickEngine(PagedEngine):
+    """Reference engine reproducing the pre-packing padded tick layout:
+    every tick dispatches a flat (slots * prefill_chunk,) buffer where
+    lane i occupies [i*chunk, (i+1)*chunk) and its unused tail rides as
+    padding (tok_pos == -1).  Token-identical to the packed engine; pays
+    the padded rectangle's FLOPs.  Lives bench-side on purpose — CI greps
+    src/repro/serve/ clean of pad-out layouts."""
+
+    def _plan_pack(self):
+        S, C = self.ecfg.slots, self.ecfg.prefill_chunk
+        tokens = np.zeros((S * C,), np.int32)
+        tok_slot = np.repeat(np.arange(S, dtype=np.int32), C)
+        tok_pos = np.full((S * C,), -1, np.int32)
+        seg_last = np.full((S,), -1, np.int32)
+        n_taken = np.zeros((S,), np.int32)
+        live = 0
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            rem = r.known()[r.pos:r.pos + C]
+            n = len(rem)
+            if n == 0:
+                continue
+            tokens[i * C:i * C + n] = rem
+            tok_pos[i * C:i * C + n] = r.pos + np.arange(n)
+            seg_last[i] = i * C + n - 1
+            n_taken[i] = n
+            live += n
+        return PackedTick(tokens, tok_slot, tok_pos, seg_last, n_taken,
+                          live)
 
 
 def measured_dispatch_path():
@@ -74,16 +119,20 @@ def measured_dispatch_path():
     return paths, vals.pop() if len(vals) == 1 else "mixed"
 
 
-def _workload(vocab, n_requests=12, seed=0, rate=0.5):
+def _workload(vocab, n_requests=12, seed=0, rate=0.5, prompt_lo=32,
+              prompt_hi=97, new_lo=8, new_hi=25):
     """Poisson arrivals (exp inter-arrival, in engine ticks), ragged
-    prompts, ragged generation lengths."""
+    prompts, ragged generation lengths.  The prompt/generation ranges set
+    the workload's phase mix: the defaults are prefill-bound; short
+    prompts + long generations make a decode-heavy load."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)).astype(int)
     return [
         {"rid": i,
          "arrival_tick": int(arrivals[i]),
-         "prompt": rng.integers(0, vocab, int(rng.integers(32, 97))),
-         "max_new": int(rng.integers(8, 25))}
+         "prompt": rng.integers(0, vocab,
+                                int(rng.integers(prompt_lo, prompt_hi))),
+         "max_new": int(rng.integers(new_lo, new_hi))}
         for i in range(n_requests)
     ]
 
@@ -107,16 +156,16 @@ def _drive(submit, step, pending, active_or_queued):
 def _warmup(engine, mk_req):
     """Compile the engine's single jitted program outside the timed region:
     the warmup request's prompt (40 tokens) exceeds the prefill chunk and
-    it decodes several tokens, so the (B, chunk) mixed program is traced —
-    nothing is ever timed cold."""
+    it decodes several tokens, so the flat packed program is traced at
+    every segment mix — nothing is ever timed cold."""
     engine.submit(mk_req())
     engine.run()
 
 
-def _run_paged(cfg, params, work, ecfg, tracer=None):
+def _run_paged(cfg, params, work, ecfg, tracer=None, cls=PagedEngine):
     """Drive one paged-engine run over ``work``; returns (wall seconds,
     finished requests, warmup-corrected stats)."""
-    eng = PagedEngine(cfg, params, ecfg, tracer=tracer)
+    eng = cls(cfg, params, ecfg, tracer=tracer)
     _warmup(eng, lambda: ServeRequest(rid=-1, prompt=np.arange(40) % cfg.vocab,
                                       max_new=4))
     # drop the warmup request from every reported stat (jit stays warm;
@@ -178,7 +227,7 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
                     "dispatches_per_tick":
                         seed_eng.stats()["dispatches_per_tick"]}
 
-    # ---- paged engine (mixed ticks): ONE dispatch per tick ---------------
+    # ---- paged engine (packed ticks): ONE flat dispatch per tick ---------
     work = _workload(cfg.vocab)
     ecfg = EngineConfig(page_size=16, num_pages=48, slots=slots,
                         prefill_chunk=32, max_seq=max_seq)
@@ -193,6 +242,8 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
     data["dispatch_paths"] = site_paths
     csv("serving_paged_engine", dt * 1e6,
         f"tok_per_s={toks/dt:.0f};"
+        f"tokens_per_dispatch={st['tokens_per_dispatch']['mean']:.1f};"
+        f"padding_fraction={st['padding_fraction']['mean']:.2f};"
         f"ttft_p50_ms={st['ttft_ms']['p50']:.1f};"
         f"ttft_p99_ms={st['ttft_ms']['p99']:.1f};"
         f"itl_p50_ms={st['inter_token_ms']['p50']:.1f};"
@@ -202,11 +253,18 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
         f"mean_util={st['mean_page_utilization']:.2f};"
         f"peak={st['pages']['peak_in_use']};"
         f"preemptions={st['preemptions']}")
+    # the seed engine dispatches ONCE PER TOKEN, so this ratio is only
+    # meaningful on the prefill-bound poisson label — not a universal
+    # packed-engine speedup (that gate lives in decode_heavy below)
     csv("serving_prefill_speedup", 0,
-        f"paged_vs_seed={dt_seed/dt:.2f};"
+        f"paged_vs_seed={dt_seed/dt:.2f};workload=poisson;"
         f"seed_prefill_dispatches~={sum(len(w['prompt']) for w in work)}")
-    data["paged"] = {"tok_per_s": toks / dt,
+    data["paged"] = {"workload_label": "poisson",
+                     "tok_per_s": toks / dt,
                      "speedup_vs_seed": dt_seed / dt,
+                     "token_budget": st["token_budget"],
+                     "tokens_per_dispatch": st["tokens_per_dispatch"],
+                     "padding_fraction": st["padding_fraction"],
                      "ttft_p50_ms": st["ttft_ms"]["p50"],
                      "ttft_p99_ms": st["ttft_ms"]["p99"],
                      "inter_token_p50_ms": st["inter_token_ms"]["p50"],
@@ -223,7 +281,7 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
                      "dispatch_path": path}
     tok_map = {r.rid: r.generated for r in done}
 
-    # ---- prefill-burst load: the regime the mixed fusion targets ---------
+    # ---- prefill-burst load: the mixed-phase regime ----------------------
     # heavier arrivals + a finer chunk keep both phases live in most ticks;
     # decode lanes ride the same dispatch instead of queueing behind a
     # prefill program
@@ -233,15 +291,21 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
         cfg, params, _workload(cfg.vocab, **burst), ecfg_burst)
     toks_m = sum(len(r.generated) for r in done_m)
     assert st_m["dispatches_per_tick"] == 1.0, st_m
-    csv("serving_mixed_tick_burst", dt_m * 1e6,
+    csv("serving_packed_tick_burst", dt_m * 1e6,
         f"tok_per_s={toks_m/dt_m:.0f};"
+        f"tokens_per_dispatch={st_m['tokens_per_dispatch']['mean']:.1f};"
+        f"padding_fraction={st_m['padding_fraction']['mean']:.2f};"
         f"ttft_p50_ms={st_m['ttft_ms']['p50']:.1f};"
         f"itl_p50_ms={st_m['inter_token_ms']['p50']:.1f};"
         f"decode_p50_ms={st_m['dispatch_ms']['p50']:.1f};"
         f"dispatches_per_tick={st_m['dispatches_per_tick']:.2f};"
         f"occupancy={st_m['mean_occupancy']:.2f};"
         f"path={path}")
-    data["mixed"] = {"tok_per_s": toks_m / dt_m,
+    data["burst"] = {"workload_label": "prefill-burst",
+                     "tok_per_s": toks_m / dt_m,
+                     "token_budget": st_m["token_budget"],
+                     "tokens_per_dispatch": st_m["tokens_per_dispatch"],
+                     "padding_fraction": st_m["padding_fraction"],
                      "ttft_p50_ms": st_m["ttft_ms"]["p50"],
                      "ttft_p99_ms": st_m["ttft_ms"]["p99"],
                      "inter_token_p50_ms": st_m["inter_token_ms"]["p50"],
@@ -255,6 +319,49 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
                      "workload": {**burst,
                                   "prefill_chunk": ecfg_burst.prefill_chunk}}
     burst_tokens = {r.rid: r.generated for r in done_m}
+
+    # ---- decode-heavy load: packed vs the padded reference layout --------
+    # short prompts, long generations: most ticks are all-decode, where the
+    # padded layout burns slots*chunk FLOPs to advance slots tokens.  The
+    # SAME workload through both layouts — identical tokens required, and
+    # CI gates packed tok/s >= padded tok/s here (the regime the flat
+    # token budget targets)
+    decode_kw = dict(n_requests=12, rate=2.0, seed=3, prompt_lo=8,
+                     prompt_hi=17, new_lo=32, new_hi=49)
+    ecfg_dec = dataclasses.replace(ecfg, prefill_chunk=8)
+    dt_p, done_p, st_p = _run_paged(
+        cfg, params, _workload(cfg.vocab, **decode_kw), ecfg_dec)
+    dt_b, done_b, st_b = _run_paged(
+        cfg, params, _workload(cfg.vocab, **decode_kw), ecfg_dec,
+        cls=PaddedTickEngine)
+    assert ({r.rid: r.generated for r in done_p}
+            == {r.rid: r.generated for r in done_b}), \
+        "packed tokens diverged from the padded reference layout"
+    assert st_p["dispatches_per_tick"] == 1.0, st_p
+    toks_p = sum(len(r.generated) for r in done_p)
+    toks_b = sum(len(r.generated) for r in done_b)
+    csv("serving_packed_vs_padded_decode_heavy", dt_p * 1e6,
+        f"packed_tok_per_s={toks_p/dt_p:.0f};"
+        f"padded_tok_per_s={toks_b/dt_b:.0f};"
+        f"speedup_packed_vs_padded={dt_b/dt_p:.2f};"
+        f"packed_tokens_per_dispatch="
+        f"{st_p['tokens_per_dispatch']['mean']:.1f};"
+        f"packed_padding_fraction={st_p['padding_fraction']['mean']:.2f};"
+        f"padded_padding_fraction={st_b['padding_fraction']['mean']:.2f};"
+        f"path={path}")
+    data["decode_heavy"] = {
+        "workload_label": "decode-heavy",
+        "packed_tok_per_s": toks_p / dt_p,
+        "padded_tok_per_s": toks_b / dt_b,
+        "speedup_packed_vs_padded": dt_b / dt_p,
+        "token_budget": st_p["token_budget"],
+        "padded_budget": ecfg_dec.slots * ecfg_dec.prefill_chunk,
+        "tokens_per_dispatch": st_p["tokens_per_dispatch"],
+        "padding_fraction": st_p["padding_fraction"],
+        "padded_padding_fraction": st_b["padding_fraction"],
+        "dispatches_per_tick": st_p["dispatches_per_tick"],
+        "workload": decode_kw,
+    }
 
     # ---- tracing overhead: identical burst workload, tracer attached -----
     # ONE engine (one compiled program), interleaved traced/untraced passes

@@ -1,17 +1,22 @@
 """Serving example: the paged continuous-batching engine over a FAL model —
 submits a ragged stream of requests and drains them through fixed batch
-slots with ONE mixed (slots, prefill_chunk) dispatch per engine tick:
-prefilling lanes advance up to a chunk of prompt tokens while decoding
-lanes advance one sampled token in the SAME jitted call, so decode is
-never head-of-line blocked behind a prefill dispatch.  The example
-verifies batched outputs match lone-request decoding, prints the engine's
-own latency metrics (TTFT / inter-token percentiles from its
-``repro.obs`` registry), captures a Perfetto-loadable Chrome trace of the
-run, and re-serves the stream with dual-branch (MHA||MLP) decode: under
-``fal``/``parallel`` the MLP input never depends on the block's own
-attention, so ``EngineConfig(dual_branch=True)`` issues each steady-state
-block's FFN off the cached per-slot first-attention signal concurrently
-with the paged KV gather — same tokens, overlapped branches.
+slots with ONE token-PACKED dispatch per engine tick: a flat
+``(token_budget,)`` buffer where each token carries its lane and position,
+so a prefilling lane contributes up to ``prefill_chunk`` tokens and a
+decoding lane exactly one in the SAME jitted call — tick FLOPs scale with
+live tokens, not a padded slots-by-chunk rectangle, and decode is never
+head-of-line blocked behind a prefill dispatch (decode tokens are packed
+first).  The example verifies batched outputs match lone-request decoding,
+prints the engine's own latency AND packing metrics (TTFT / inter-token /
+tokens-per-dispatch / padding-fraction percentiles from its ``repro.obs``
+registry), demonstrates the ``max_prefill_tokens`` fairness knob
+throttling a prefill burst without changing a single token, captures a
+Perfetto-loadable Chrome trace of the run, and re-serves the stream with
+dual-branch (MHA||MLP) decode: under ``fal``/``parallel`` the MLP input
+never depends on the block's own attention, so
+``EngineConfig(dual_branch=True)`` issues each steady-state block's FFN
+off the cached per-slot first-attention signal concurrently with the
+paged KV gather — same tokens, overlapped branches.
 
 Run:  PYTHONPATH=src python examples/serve_requests.py
 """
@@ -54,6 +59,11 @@ print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
       f"{st['ticks']} ticks = {st['dispatches_per_tick']:.2f}/tick, "
       f"occupancy {st['mean_occupancy']:.2f}, "
       f"peak pages {st['pages']['peak_in_use']}/{st['pages']['capacity']})")
+print(f"packed ticks: budget {st['token_budget']} tokens/dispatch, live "
+      f"p50 {st['tokens_per_dispatch']['p50']:.0f} "
+      f"p99 {st['tokens_per_dispatch']['p99']:.0f}, padding fraction "
+      f"p50 {st['padding_fraction']['p50']:.2f} (a padded slots-by-chunk "
+      f"layout would idle at {1 - 1/ecfg.prefill_chunk:.2f} while decoding)")
 print(f"engine-measured latency: ttft p50 {st['ttft_ms']['p50']:.0f}ms "
       f"p99 {st['ttft_ms']['p99']:.0f}ms, inter-token p50 "
       f"{st['inter_token_ms']['p50']:.0f}ms, queue wait p50 "
@@ -79,12 +89,40 @@ ref = lone.run()[0].generated
 assert ref == probe.generated, (ref, probe.generated)
 print("continuous batching == lone decoding ✓")
 
+# --- fairness knob: cap prefill tokens per tick ----------------------------
+# a burst of long prompts would claim most of the token budget every tick;
+# max_prefill_tokens caps the PREFILL share (decode tokens are packed
+# first and never displaced), trading prefill throughput for inter-token
+# latency — pacing changes, tokens never do
+burst_prompts = [rng.integers(0, cfg.vocab, 40 + 8 * i) for i in range(6)]
+
+
+def serve_burst(max_prefill):
+    eng = PagedEngine(cfg, params,
+                      EngineConfig(page_size=8, num_pages=64, slots=4,
+                                   prefill_chunk=8, max_seq=128,
+                                   max_prefill_tokens=max_prefill),
+                      plan=plan)
+    for i, p in enumerate(burst_prompts):
+        eng.submit(ServeRequest(rid=i, prompt=p, max_new=10))
+    out = {r.rid: r.generated for r in eng.run()}
+    return out, eng.stats()
+
+
+uncapped, st_u = serve_burst(0)
+capped, st_c = serve_burst(4)
+assert capped == uncapped
+print(f"fairness knob: max_prefill_tokens=4 stretches the burst over "
+      f"{st_c['ticks']} ticks (vs {st_u['ticks']} uncapped), live "
+      f"tokens/dispatch p50 {st_c['tokens_per_dispatch']['p50']:.0f} vs "
+      f"{st_u['tokens_per_dispatch']['p50']:.0f} — identical tokens ✓")
+
 # --- dual-branch decode: MHA||MLP off the cached FAL signal ----------------
 # valid only for fal/parallel-family connections (ExecutionPlan.validate
 # rejects preln/falplus loudly); on the CPU dispatch path logits — and
 # therefore tokens — are bit-identical to the sequential engine (the fused
 # TPU kernel is tolerance-close), the win is branch overlap.  Dual rides
-# the same ONE-dispatch-per-tick mixed program: steady-state blocks issue
+# the same ONE-dispatch-per-tick packed program: steady-state blocks issue
 # their FFN off the cached first-attention signal concurrently with the
 # paged KV gather inside that single jitted call.
 dual = PagedEngine(cfg, params,

@@ -93,7 +93,8 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
                           use_pallas=None, interpret=False):
-    """Chunked paged attention (the mixed-tick serving kernel): q (B,C,H,D)
+    """Chunked paged attention (per-lane rectangular layout; the serving
+    engine now packs tokens through ``paged_packed_attention``): q (B,C,H,D)
     chunks at per-lane positions ``pos`` (first ``n_valid`` rows of each
     lane valid, causal within the chunk) against (P,page,Hkv,D*) pools
     addressed through (B,T) block tables.  One dispatch serves lanes at ANY
@@ -109,6 +110,29 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
                                          pos, n_valid, interpret=interpret)
     return _ref.paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
                                           pos, n_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
+                           tok_pos, *, use_pallas=None, interpret=False):
+    """Packed ragged paged attention (the token-packed serving kernel):
+    q (T,H,D) — one flat token buffer where token t belongs to lane
+    ``tok_slot[t]`` at logical position ``tok_pos[t]`` — against
+    (P,page,Hkv,D*) pools addressed through per-SLOT (S,Tb) block tables.
+    One dispatch serves lanes at ANY phase with FLOPs scaling in live
+    tokens: a prefilling lane contributes up to ``chunk`` tokens, a
+    decoding lane exactly one.  Padding tokens carry tok_pos == -1 and
+    emit exactly 0; callers must only read live rows.  Pallas kernel on
+    TPU; gather-based jnp oracle on CPU (identical numerics)."""
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("paged_packed_attention", use_pallas or interpret)
+    if use_pallas or interpret:
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_packed_attention(q, k_pages, v_pages, block_tables,
+                                          tok_slot, tok_pos,
+                                          interpret=interpret)
+    return _ref.paged_packed_attention_ref(q, k_pages, v_pages, block_tables,
+                                           tok_slot, tok_pos)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",

@@ -3,10 +3,14 @@
 ``paged_decode_attention`` — one query token per request attends to its KV
 history stored in fixed-size pages scattered through
 (num_pages, page_size, Hkv, D) pools.  ``paged_chunk_attention`` — the
-C >= 1 generalisation that backs the serving engine's MIXED tick: every
-lane carries a C-token query chunk at its own position (per-lane ``pos`` /
-``n_valid`` vectors), causal within the chunk, so prefilling lanes
-(n_valid up to C) and decoding lanes (n_valid == 1) ride in ONE dispatch.
+C >= 1 generalisation of the padded (slots, C) layout: every lane carries
+a C-token query chunk at its own position (per-lane ``pos`` / ``n_valid``
+vectors), causal within the chunk.  ``paged_packed_attention`` — the
+segment-aware kernel behind the serving engine's token-PACKED tick: one
+flat (T,) token buffer with per-token ``(slot, pos)`` ids, so a
+prefilling lane contributes up to ``chunk`` tokens and a decoding lane
+exactly one in the SAME dispatch, and the tick's FLOPs scale with live
+tokens instead of slots x chunk.
 
 In both kernels the block table and per-request positions ride in as
 scalar-prefetch operands (``PrefetchScalarGridSpec``): the K/V BlockSpec
@@ -182,7 +186,10 @@ def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
                           scale=None, interpret=False):
-    """Chunked paged attention — the mixed-tick serving kernel.
+    """Chunked paged attention — per-lane rectangular (B, C) layout.
+
+    Kept as the padded reference the packed serving kernel
+    (``paged_packed_attention``) is benchmarked against.
 
     q: (B, C, H, D) — lane b's C query tokens at logical positions
     ``pos[b] .. pos[b] + C - 1``, first ``n_valid[b]`` valid (their K/V are
@@ -236,3 +243,109 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
       n_valid.astype(jnp.int32), qg, kt, vt)
     return out.reshape(B, Hkv, C, G, Dv).transpose(0, 2, 1, 3, 4) \
         .reshape(B, C, H, Dv)
+
+
+def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale, page_size):
+    t = pl.program_id(0)
+    it = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = ps_ref[t]                 # -1 for padding tokens (nothing visible)
+    k_start = it * page_size          # logical position of this page's slot 0
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (G,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # skip pages entirely past this token's position; padding tokens
+    # (q_pos == -1) skip every page, so l stays 0 and the row emits 0
+    pl.when(k_start <= q_pos)(_body)
+
+    @pl.when(it == nt - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
+                           tok_pos, *, scale=None, interpret=False):
+    """Packed ragged paged attention — the token-packed serving kernel.
+
+    q: (T, H, D) — one flat buffer of query tokens where token t belongs
+    to lane ``tok_slot[t]`` at logical position ``tok_pos[t]`` (its K/V
+    already scattered into the pools); k_pages/v_pages: (P, page, Hkv, D*);
+    block_tables: (S, Tb) int32 per-SLOT tables; tok_slot/tok_pos: (T,)
+    int32.  Returns (T, H, Dv).
+
+    Grid (T, Hkv, Tb): the K/V BlockSpec index maps read the block table
+    through the scalar-prefetched per-token slot ids
+    (``bt[tok_slot[t], j]``), so each grid step DMAs exactly one physical
+    page of the token's OWN segment — the per-token generalisation of
+    ``paged_decode_attention``'s per-lane indirection.  Pages past a
+    token's position are skipped; padding tokens carry tok_pos == -1 and
+    emit exactly 0 (same convention as the oracle).
+    """
+    T, H, D = q.shape
+    page, Hkv = k_pages.shape[1], k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    G = H // Hkv
+    Tb = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+
+    qg = q.reshape(T, Hkv, G, D)
+    kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T, Hkv, Tb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda t, h, j, bt, sl, ps: (t, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, Dv),
+                         lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv),
+                               lambda t, h, j, bt, sl, ps: (t, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_packed_kernel, scale=scale,
+                               page_size=page)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), tok_slot.astype(jnp.int32),
+      tok_pos.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(T, H, Dv)

@@ -90,6 +90,44 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, pos,
     return o.reshape(B, C, H, Dv).astype(q.dtype)
 
 
+def paged_packed_attention_ref(q, k_pages, v_pages, block_tables, tok_slot,
+                               tok_pos, *, scale=None):
+    """Packed ragged paged-attention oracle (gather-based): a flat (T,)
+    token buffer where token t belongs to lane ``tok_slot[t]`` at logical
+    position ``tok_pos[t]`` — the segment-aware generalisation of
+    ``paged_chunk_attention_ref`` that backs the token-packed tick.
+
+    q: (T, H, D) packed query tokens; k_pages/v_pages: (P, page_size,
+    Hkv, D*); block_tables: (S, Tb) int32 per-SLOT tables; tok_slot /
+    tok_pos: (T,) int32.  Returns (T, H, Dv).
+
+    Token t sees exactly the keys of its own slot's block table at
+    gathered index j <= tok_pos[t] (causality; its own K/V and every
+    earlier token of its segment are already scattered into the pools).
+    Padding tokens carry tok_pos == -1: no key is visible and the row
+    returns 0 — the identical convention to the Pallas kernel, so the two
+    agree on every row; callers must only read live (tok_pos >= 0) rows.
+    """
+    T, H, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    Dv = v_pages.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+    bt = block_tables[tok_slot]                    # (T, Tb) per-token tables
+    k = k_pages[bt].reshape(T, -1, Hkv, D)         # (T, Sk, Hkv, D)
+    v = v_pages[bt].reshape(T, -1, Hkv, Dv)
+    qg = q.reshape(T, Hkv, G, D)
+    s = jnp.einsum("thgd,tkhd->thgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(k.shape[1])[None]                        # (1, Sk)
+    mask = k_pos <= tok_pos[:, None]                            # (T, Sk)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[:, None, None, None], p, 0.0)
+    o = jnp.einsum("thgk,tkhd->thgd", p, v.astype(jnp.float32))
+    return o.reshape(T, H, Dv).astype(q.dtype)
+
+
 def ln_add_ref(x, a1n, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
     xf = x.astype(jnp.float32)
     if kind == "layernorm":

@@ -126,6 +126,26 @@ def paged_scatter(pages, vals, block_tables, pos, n_valid, page_size):
     return flat.reshape(pages.shape)
 
 
+def packed_scatter(pages, vals, block_tables, tok_slot, tok_pos, page_size):
+    """Write a flat (T, ...) packed token buffer into the page pool.
+
+    pages: (P, page_size, ...); vals: (T, ...) one value per packed token;
+    block_tables: (S, Tb) per-SLOT tables; tok_slot/tok_pos: (T,) — token t
+    belongs to lane ``tok_slot[t]`` at logical position ``tok_pos[t]``.
+    Padding tokens carry tok_pos == -1 and are redirected to the scratch
+    page (page 0), so ragged packs never corrupt live pages.
+    """
+    Tb = block_tables.shape[1]
+    pos = jnp.maximum(tok_pos, 0)
+    blk = jnp.clip(pos // page_size, 0, Tb - 1)
+    pg = block_tables[tok_slot, blk]                              # (T,)
+    pg = jnp.where(tok_pos >= 0, pg, 0)                           # scratch
+    flat_idx = pg * page_size + pos % page_size
+    flat = pages.reshape((pages.shape[0] * page_size,) + pages.shape[2:])
+    flat = flat.at[flat_idx].set(vals.astype(pages.dtype))
+    return flat.reshape(pages.shape)
+
+
 def paged_gather(pages, block_tables):
     """(P, page_size, ...) x (B, T) -> (B, T*page_size, ...): the request's
     logical KV sequence (gathered index == logical position)."""
@@ -231,6 +251,40 @@ def gqa_paged_dual(p, ffn, cfg, x, mlp_in, cache, block_tables, pos,
                                   mlp_in, ffn, kind=cfg.mlp)
     a = o[:, None].reshape(B, C, -1) @ p["wo"].astype(x.dtype)
     return a, y, {"k": kc, "v": vc}
+
+
+def gqa_packed_apply(p, cfg, x, cache, block_tables, tok_slot, tok_pos, *,
+                     window=0):
+    """Token-packed ragged tick against a paged cache.  x: (1, T, D) — one
+    flat buffer of packed tokens where token t belongs to lane
+    ``tok_slot[t]`` at logical position ``tok_pos[t]`` (padding tokens at
+    tok_pos == -1 scatter to scratch and yield meaningless rows that
+    callers must not read).  A prefilling lane contributes up to ``chunk``
+    contiguous tokens, a decoding lane exactly one, in the SAME dispatch —
+    FLOPs scale with live tokens, not slots x chunk.  Returns
+    (out (1,T,D), new_cache)."""
+    B, T = x.shape[:2]
+    page = cache["k"].shape[1]
+    positions = jnp.maximum(tok_pos, 0)[None]                     # (1, T)
+    q, k, v = gqa_qkv(p, cfg, x, positions)                       # (1,T,H,Dh)
+    kc = packed_scatter(cache["k"], k[0], block_tables, tok_slot, tok_pos,
+                        page)
+    vc = packed_scatter(cache["v"], v[0], block_tables, tok_slot, tok_pos,
+                        page)
+    if cfg.attn_softcap == 0.0 and isinstance(window, int) and window == 0:
+        # full-attention tick: the segment-aware block-table kernel (Pallas
+        # on TPU DMAs each token's OWN pages; gather-based ref on CPU)
+        from repro.kernels import ops
+        o = ops.paged_packed_attention(q[0], kc, vc, block_tables,
+                                       tok_slot, tok_pos)[None]
+    else:
+        # sliding-window / softcapped layers (gemma2): per-token masked
+        # gather — each token indexes its own slot's gathered sequence
+        kg = paged_gather(kc, block_tables)[tok_slot]             # (T,Sk,..)
+        vg = paged_gather(vc, block_tables)[tok_slot]
+        o = chunk_attention(q[0][:, None], kg, vg, tok_pos[:, None],
+                            window=window, cap=cfg.attn_softcap)[:, 0][None]
+    return o.reshape(B, T, -1) @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}
 
 
 # ------------------------------------------------------------------------- #
@@ -525,4 +579,39 @@ def mla_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid):
     o_lat = jnp.einsum("bhck,bkr->bchr", pattn.astype(cc.dtype), cc)
     w_uv = p["w_uv"].astype(x.dtype).reshape(rkv, H, dv)
     o = jnp.einsum("bchr,rhd->bchd", o_lat, w_uv).reshape(B, C, H * dv)
+    return o @ p["wo"].astype(x.dtype), {"c": c_pool, "kr": kr_pool}
+
+
+def mla_packed_apply(p, cfg, x, cache, block_tables, tok_slot, tok_pos):
+    """Token-packed absorbed-matrix MLA against paged (c, k_rope) pages.
+    x: (1, T, D) packed buffer (see ``gqa_packed_apply`` for the token/
+    segment contract); each token attends its OWN slot's gathered latent
+    sequence.  Returns (out (1,T,D), new_cache)."""
+    B, T = x.shape[:2]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    page = cache["c"].shape[1]
+    positions = jnp.maximum(tok_pos, 0)[None]                     # (1, T)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)                 # (1,T,H,*)
+    c, kr = _mla_ckv(p, cfg, x, positions)                        # (1,T,*)
+    c_pool = packed_scatter(cache["c"], c[0], block_tables, tok_slot,
+                            tok_pos, page)
+    kr_pool = packed_scatter(cache["kr"], kr[0], block_tables, tok_slot,
+                             tok_pos, page)
+    cc = paged_gather(c_pool, block_tables)[tok_slot]             # (T,Sk,rkv)
+    krc = paged_gather(kr_pool, block_tables)[tok_slot]           # (T,Sk,dr)
+    w_uk = p["w_uk"].astype(x.dtype).reshape(rkv, H, dn)
+    q_lat = jnp.einsum("thd,rhd->thr", q_nope[0], w_uk)           # (T,H,rkv)
+    s = jnp.einsum("thr,tkr->thk", q_lat, cc,
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("thd,tkd->thk", q_rope[0], krc,
+                    preferred_element_type=jnp.float32)
+    s *= (dn + dr) ** -0.5
+    mask = jnp.arange(cc.shape[1])[None] <= tok_pos[:, None]      # (T, Sk)
+    s = jnp.where(mask[:, None], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("thk,tkr->thr", pattn.astype(cc.dtype), cc)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(rkv, H, dv)
+    o = jnp.einsum("thr,rhd->thd", o_lat, w_uv).reshape(B, T, H * dv)
     return o @ p["wo"].astype(x.dtype), {"c": c_pool, "kr": kr_pool}

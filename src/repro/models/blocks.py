@@ -75,11 +75,14 @@ def _ffn_apply(p, cfg, h, kind, plan: ExecutionPlan):
 
 def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
                 is_block0=False, plan=None, enc_out=None, cache=None,
-                pos=None, causal=True, block_tables=None, n_valid=None):
+                pos=None, causal=True, block_tables=None, n_valid=None,
+                tok_slot=None, tok_pos=None):
     """One block, full-sequence (train/eval/prefill), single-token decode,
-    or chunked paged decode/prefill (``plan.phase``; for paged, x is
-    (B, C, D), ``cache`` a page pool, ``block_tables``/``n_valid`` the
-    paged-serving metadata).
+    or paged decode/prefill (``plan.phase``; ``cache`` a page pool).  Paged
+    has two layouts: the padded chunk layout — x (B, C, D) with per-lane
+    ``pos``/``n_valid`` — and the token-PACKED layout — x (1, T, D) one
+    flat ragged buffer with per-token ``tok_slot``/``tok_pos`` segment ids
+    (selected when ``tok_slot`` is not None; the serving engine's tick).
 
     Returns (x_out, a_raw, aux, new_cache).  ``a_raw`` is this block's MHA
     output (block 0 exports it as the first-attention signal).
@@ -112,7 +115,8 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
                 "only (cross-attention consumes the assembled attention)")
         return _block_apply_dual(p, cfg, x, a1_sig, window, kind=kind,
                                  plan=plan, cache=cache, pos=pos,
-                                 block_tables=block_tables, n_valid=n_valid)
+                                 block_tables=block_tables, n_valid=n_valid,
+                                 tok_slot=tok_slot, tok_pos=tok_pos)
     if plan.sequence_parallel and plan.tp_axis is not None \
             and plan.full_sequence:
         if "xattn" in p or not causal:
@@ -128,7 +132,16 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
     h = L.norm_apply(p["ln1"], x, cfg.norm)
     new_cache = None
     if plan.phase is Phase.PAGED:
-        if cfg.use_mla:
+        if tok_slot is not None:
+            if cfg.use_mla:
+                a, new_cache = A.mla_packed_apply(p["attn"], cfg, h, cache,
+                                                  block_tables, tok_slot,
+                                                  tok_pos)
+            else:
+                a, new_cache = A.gqa_packed_apply(p["attn"], cfg, h, cache,
+                                                  block_tables, tok_slot,
+                                                  tok_pos, window=window)
+        elif cfg.use_mla:
             a, new_cache = A.mla_paged_apply(p["attn"], cfg, h, cache,
                                              block_tables, pos, n_valid)
         else:
@@ -191,7 +204,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
 
 def _block_apply_dual(p, cfg, x, a1_sig, window, *, kind,
                       plan: ExecutionPlan, cache, pos, block_tables,
-                      n_valid):
+                      n_valid, tok_slot=None, tok_pos=None):
     """Branch-parallel decode block: MHA || MLP (``plan.dual_branch``).
 
     For ``core.fal.DUAL_BRANCH_MODES`` the MLP input is a function of only
@@ -221,15 +234,28 @@ def _block_apply_dual(p, cfg, x, a1_sig, window, *, kind,
     h = L.norm_apply(p["ln1"], x, cfg.norm)
     C = x.shape[1]
     if (plan.phase is Phase.PAGED and kind == "dense" and not cfg.use_mla
-            and C == 1 and cfg.attn_softcap == 0.0
+            and tok_slot is None and C == 1 and cfg.attn_softcap == 0.0
             and isinstance(window, int) and window == 0):
-        # single-token dense tick: fused dual-branch dispatch
+        # single-token dense tick: fused dual-branch dispatch (padded
+        # layout only — a packed buffer of length 1 is NOT a (B, 1) tick)
         a, y, new_cache = A.gqa_paged_dual(p["attn"], p["ffn"], cfg, h,
                                            mlp_in, cache, block_tables,
                                            pos, n_valid)
         aux = jnp.zeros((), jnp.float32)
     else:
-        if plan.phase is Phase.PAGED:
+        if plan.phase is Phase.PAGED and tok_slot is not None:
+            # token-packed tick: branch-parallel ops (the packed kernel
+            # serves the MHA branch; arithmetic matches the sequential
+            # packed path op-for-op, so tokens stay bit-identical)
+            if cfg.use_mla:
+                a, new_cache = A.mla_packed_apply(p["attn"], cfg, h, cache,
+                                                  block_tables, tok_slot,
+                                                  tok_pos)
+            else:
+                a, new_cache = A.gqa_packed_apply(p["attn"], cfg, h, cache,
+                                                  block_tables, tok_slot,
+                                                  tok_pos, window=window)
+        elif plan.phase is Phase.PAGED:
             if cfg.use_mla:
                 a, new_cache = A.mla_paged_apply(p["attn"], cfg, h, cache,
                                                  block_tables, pos, n_valid)

@@ -279,7 +279,7 @@ def _decoder_init_cache(p, cfg, batch, seq, dtype):
 
 def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
                          plan: ExecutionPlan, block_tables=None,
-                         n_valid=None):
+                         n_valid=None, tok_slot=None, tok_pos=None):
     """Scan the stacked post-block0 layers in dense/moe segments over
     per-layer caches (dense+moe kinds share attention caches; the ffn kind
     switch is static per segment).  Returns (x, new_stacked_cache).
@@ -309,7 +309,7 @@ def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
                 h, _, _, c_new = BL.block_apply(
                     pb, cfg, h, a1_sig, None, w, kind=kind, plan=plan,
                     cache=ci, pos=pos, block_tables=block_tables,
-                    n_valid=n_valid)
+                    n_valid=n_valid, tok_slot=tok_slot, tok_pos=tok_pos)
                 return h, c_new
 
             xs = (p[name], cache_seg) if static_zero else \
@@ -371,9 +371,10 @@ def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan,
     (B,) valid tokens per lane (invalid lanes -> scratch page),
     block_tables (B, T).  Returns (logits (B, C, V), new_cache).  Lanes are
     phase-independent: a C > 1 tick serves any mix of prefilling lanes
-    (n_valid up to C) and decoding lanes (n_valid == 1) — the serving
-    engine's MIXED tick compiles exactly this one program; C == 1 is the
-    retired decode-only tick shape.  Full attention runs the block-table
+    (n_valid up to C) and decoding lanes (n_valid == 1); the serving
+    engine now compiles the token-PACKED program instead (flat batch
+    with ``tok_slot``/``tok_pos``); C == 1 is the retired decode-only
+    tick shape.  Full attention runs the block-table
     kernels (``kernels.ops.paged_chunk_attention`` for C > 1,
     ``paged_decode_attention`` for C == 1) with no gathered HBM copy.
 
@@ -438,6 +439,74 @@ def _decoder_paged_decode(p, cfg, batch, cache, plan: ExecutionPlan,
         return x, new_caches
     logits = _logits(p, cfg, x)
     return logits, new_caches
+
+
+def _decoder_paged_packed(p, cfg, batch, cache, plan: ExecutionPlan,
+                          want="logits"):
+    """Token-PACKED ragged tick: one flat (T,) token buffer against page
+    pools — the serving engine's ONE program per tick.
+
+    batch: tokens (T,), tok_slot (T,) owning lane per token, tok_pos (T,)
+    logical position per token (-1 = padding: scatters to scratch, emits
+    meaningless rows), block_tables (S, Tb) per-SLOT tables, seg_last (S,)
+    index of each slot's LAST packed token in the buffer (-1 = slot sat
+    this tick out).  Returns (logits (1, T, V) — or hidden (1, T, D) with
+    ``want='hidden'`` — and new_cache).
+
+    A prefilling lane contributes up to ``chunk`` contiguous tokens and a
+    decoding lane exactly one, so the tick's FLOPs scale with LIVE tokens
+    instead of slots x chunk (the padded `_decoder_paged_decode` layout).
+    The per-slot FAL export (``cache['a1_sig']``) is refreshed from each
+    active slot's seg_last row; with ``plan.dual_branch`` the steady-state
+    blocks run MHA||MLP off this tick's fresh per-token signal — every
+    packed token is a live token at its own position, so no per-slot
+    substitution is needed and tokens stay bit-identical to the sequential
+    packed path.
+    """
+    tokens, bt = batch["tokens"], batch["block_tables"]
+    tok_slot, tok_pos = batch["tok_slot"], batch["tok_pos"]
+    seg_last = batch["seg_last"]
+    positions = jnp.maximum(tok_pos, 0)[None]                   # (1, T)
+    x = _embed_tokens(p, cfg, tokens[None], positions)
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        # VLM: per-token patch embeddings for packed tokens inside the
+        # image prefix (batch["image_embeds"]: (T, D))
+        x = jnp.where((positions < cfg.n_image_tokens)[:, :, None],
+                      batch["image_embeds"][None].astype(x.dtype), x)
+    x = constrain_batch(x, plan)
+    wsched = BL.window_schedule(cfg)
+
+    x, a1_raw, _, c0 = BL.block_apply(
+        p["block0"], cfg, x, None, positions, wsched[0],
+        kind=_layer_kind(cfg, 0), is_block0=True, plan=plan,
+        cache=cache["block0"], block_tables=bt,
+        tok_slot=tok_slot, tok_pos=tok_pos)
+    a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+    new_caches = {"block0": c0}
+
+    # refresh the per-slot FAL export from each active segment's LAST
+    # packed token; slots sitting this tick out keep their cached signal
+    sig = a1_sig if a1_sig is not None else a1_raw              # (1, T, D)
+    active = seg_last >= 0
+    new_sig = sig[0, jnp.maximum(seg_last, 0)].astype(cache["a1_sig"].dtype)
+    new_caches["a1_sig"] = jnp.where(active[:, None], new_sig,
+                                     cache["a1_sig"])
+
+    x, blocks_new = _decoder_layer_stack(p, cfg, x, a1_sig, None,
+                                         cache["blocks"], plan,
+                                         block_tables=bt,
+                                         tok_slot=tok_slot, tok_pos=tok_pos)
+    new_caches["blocks"] = blocks_new
+
+    if want == "hidden":
+        # the engine reads ONE row per segment (seg_last): skip the
+        # (1, T, V) head here and let the caller run ``lm_head`` on the
+        # gathered segment-last rows
+        return x, new_caches
+    logits = _logits(p, cfg, x)
+    return logits, new_caches
+
+
 def _mamba_block_init(key, cfg):
     k1, k2 = jax.random.split(key)
     return {"ln": L.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
@@ -827,15 +896,26 @@ def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16"):
 
 
 def paged_decode_step(params, cfg, batch, cache, plan=None, want="logits"):
-    """Chunked paged tick -> (logits (B,C,V), new_cache).  See
-    ``_decoder_paged_decode`` for the batch contract.  ``want='hidden'``
-    returns the pre-head hidden states (B, C, D) instead of logits — the
-    serving engines gather each lane's last valid row and run ``lm_head``
-    on (B, 1, D), paying 1/C of the head matmul per tick."""
+    """One paged tick -> (logits, new_cache) in either paged layout:
+
+      * token-PACKED (the serving engine's tick; selected when the batch
+        carries ``tok_slot``): a flat (T,) ragged buffer with per-token
+        segment ids — see ``_decoder_paged_packed`` for the contract;
+        returns (1, T, V) logits / (1, T, D) hidden.
+      * padded chunk (kernel/test harness layout): tokens (B, C) with
+        per-lane ``pos``/``n_valid`` — see ``_decoder_paged_decode``;
+        returns (B, C, V) / (B, C, D).
+
+    ``want='hidden'`` returns the pre-head hidden states instead of logits
+    — the serving engine gathers each segment's last row and runs
+    ``lm_head`` on (S, 1, D), paying live-segments/T of the head matmul."""
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"paged decode: decoder family only, got {cfg.family}")
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED).validate(cfg)
+    if "tok_slot" in batch:
+        return _decoder_paged_packed(params, cfg, batch, cache, plan,
+                                     want=want)
     return _decoder_paged_decode(params, cfg, batch, cache, plan, want=want)
 
 

@@ -28,22 +28,24 @@ Metric-name reference
 name                                    type       unit     emitting site
 ======================================  =========  =======  ==========================================
 engine_ticks_total                      counter    ticks    serve/scheduler.py  PagedEngine.step
-engine_dispatches_total                 counter    calls    serve/scheduler.py  PagedEngine._run_call
-engine_mixed_calls_total                counter    calls    serve/scheduler.py  PagedEngine._step_mixed
-engine_prefill_tokens_total             counter    tokens   serve/scheduler.py  PagedEngine._run_call
-engine_decode_tokens_total              counter    tokens   serve/scheduler.py  PagedEngine._run_call
+engine_dispatches_total                 counter    calls    serve/scheduler.py  PagedEngine._run_packed
+engine_packed_calls_total               counter    calls    serve/scheduler.py  PagedEngine._step_packed
+engine_prefill_tokens_total             counter    tokens   serve/scheduler.py  PagedEngine._run_packed
+engine_decode_tokens_total              counter    tokens   serve/scheduler.py  PagedEngine._run_packed
 engine_preemptions_total                counter    events   serve/scheduler.py  PagedEngine._preempt
 engine_rejected_total                   counter    events   serve/scheduler.py  PagedEngine._reject
 engine_admitted_total                   counter    events   serve/scheduler.py  PagedEngine._admit
 engine_finished_total                   counter    events   serve/scheduler.py  PagedEngine._finish
-engine_occupancy                        histogram  ratio    serve/scheduler.py  PagedEngine._run_call
+engine_occupancy                        histogram  ratio    serve/scheduler.py  PagedEngine._run_packed
+engine_tokens_per_dispatch              histogram  tokens   serve/scheduler.py  PagedEngine._run_packed
+engine_padding_fraction                 histogram  ratio    serve/scheduler.py  PagedEngine._run_packed
 engine_page_utilization                 histogram  ratio    serve/scheduler.py  PagedEngine.step
 engine_queue_wait_ticks                 histogram  ticks    serve/scheduler.py  PagedEngine._admit
-engine_ttft_ms                          histogram  ms       serve/scheduler.py  PagedEngine._run_call
-engine_ttft_ticks                       histogram  ticks    serve/scheduler.py  PagedEngine._run_call
-engine_inter_token_ms                   histogram  ms       serve/scheduler.py  PagedEngine._run_call
+engine_ttft_ms                          histogram  ms       serve/scheduler.py  PagedEngine._run_packed
+engine_ttft_ticks                       histogram  ticks    serve/scheduler.py  PagedEngine._run_packed
+engine_inter_token_ms                   histogram  ms       serve/scheduler.py  PagedEngine._run_packed
 engine_request_latency_ticks            histogram  ticks    serve/scheduler.py  PagedEngine._finish
-engine_dispatch_ms                      histogram  ms       serve/scheduler.py  PagedEngine._run_call
+engine_dispatch_ms                      histogram  ms       serve/scheduler.py  PagedEngine._run_packed
 pages_in_use                            gauge      pages    serve/paged_cache.py PageAllocator
 pages_alloc_total                       counter    pages    serve/paged_cache.py PageAllocator.alloc
 pages_free_total                        counter    pages    serve/paged_cache.py PageAllocator.free

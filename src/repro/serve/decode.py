@@ -82,9 +82,9 @@ class ContinuousBatcher:
 
     The seed engine is single-program too — ONE (B, 1) dispatch per tick —
     but every lane advances exactly one token, so prompts prefill one
-    dispatch per token.  The paged engine's mixed tick keeps the
-    one-dispatch-per-tick property while letting prefilling lanes advance a
-    whole chunk; ``stats()`` reports the same ``dispatches_per_tick`` /
+    dispatch per token.  The paged engine's packed tick keeps the
+    one-dispatch-per-tick property while letting prefilling lanes pack a
+    whole chunk of tokens into the flat budget; ``stats()`` reports the same ``dispatches_per_tick`` /
     occupancy fields on both engines (both routed through a
     ``repro.obs.MetricsRegistry``) so the comparison is direct."""
 

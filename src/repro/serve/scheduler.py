@@ -6,15 +6,19 @@ engine with:
   * admission control — a request enters a slot only when the page pool can
     cover its context (policy 'prompt': prompt + 1 token; 'full': prompt +
     max_new, no-preemption reservation);
-  * MIXED ticks — the engine compiles exactly ONE jitted
-    (slots, prefill_chunk) program (``make_paged_step``) and issues ONE
-    dispatch per tick that serves lanes at ANY phase: prefilling lanes
-    advance up to ``prefill_chunk`` prompt tokens while decoding lanes
-    advance 1 sampled token in the SAME call (per-lane ``pos``/``n_valid``
-    vectors mask the rest; the chunked block-table kernel
-    ``kernels.ops.paged_chunk_attention`` serves the attention).  Decode
-    lanes are never head-of-line blocked behind a prefill dispatch, and
-    per-tick dispatch overhead is paid once;
+  * TOKEN-PACKED ticks — the engine compiles exactly ONE jitted flat
+    ``(token_budget,)`` program (``make_packed_step``) and issues ONE
+    dispatch per tick that serves lanes at ANY phase over one ragged token
+    buffer: token t belongs to lane ``tok_slot[t]`` at logical position
+    ``tok_pos[t]``.  A prefilling lane contributes up to ``prefill_chunk``
+    tokens, a decoding lane exactly one, so tick FLOPs scale with LIVE
+    tokens instead of the padded slots-by-chunk rectangle (the
+    segment-aware kernel ``kernels.ops.paged_packed_attention`` serves the
+    attention; the LM head runs only on each segment's last token).
+    Decode lanes are packed FIRST and are therefore never head-of-line
+    blocked behind a prefill burst; ``EngineConfig.max_prefill_tokens`` is
+    the fairness knob that additionally caps prefill tokens per tick.
+    ``pack_tokens`` is the pure host-side packer (property-tested);
   * per-request seeded sampling (serve/sampling.py) fused into the tick's
     dispatch;
   * preemption by page pressure — when a slot can't grow its block table,
@@ -65,41 +69,43 @@ _SITE = "serve/scheduler.py"
 # --------------------------------------------------------------------------- #
 # the engine's ONE jitted program
 # --------------------------------------------------------------------------- #
-def make_paged_step(cfg, plan=None):
-    """Jitted paged tick: (params, cache, tokens (B,C), pos (B,),
-    n_valid (B,), block_tables (B,T), temps, top_ks, top_ps, seeds,
-    sample_pos) -> (last_logits (B,V), next_tokens (B,), new_cache).
+def make_packed_step(cfg, plan=None):
+    """Jitted packed tick: (params, cache, tokens (T,), tok_slot (T,),
+    tok_pos (T,), block_tables (S,Tb), seg_last (S,), temps, top_ks,
+    top_ps, seeds, sample_pos) -> (seg_logits (S,V), next_tokens (S,),
+    new_cache).
 
-    The engine consumes exactly one row of logits per lane, so the program
-    runs the blocks to hidden states, gathers each lane's LAST VALID row
-    and applies the LM head to the (B, 1, D) gather — 1/C of the tick's
-    dominant matmul compared to a full (B, C, V) head.
+    T is the engine's flat token budget: one ragged buffer where token t
+    belongs to lane ``tok_slot[t]`` at logical position ``tok_pos[t]``
+    (padding tokens carry tok_pos == -1 and never touch live state).  The
+    engine consumes at most one logits row per lane, so the program runs
+    the blocks to hidden states, gathers each SEGMENT's last token
+    (``seg_last``, -1 for lanes sitting the tick out) and applies the LM
+    head to the (S, 1, D) gather — 1/T of the tick's dominant matmul
+    compared to a full (T, V) head.
 
     ``plan`` is a typed ``core.plan.ExecutionPlan`` — the only way to
     configure the dispatch; its phase is pinned to paged here.
     ``plan.dual_branch`` selects the MHA||MLP branch-parallel block for the
-    steady-state layers (fal/parallel-family connections; validated),
-    overlapping each block's paged KV gather with its FFN off the cached
-    per-slot first-attention signal.  The returned callable is
-    phase-agnostic per LANE: lane b advances ``n_valid[b]`` tokens from its
-    own position ``pos[b]`` — a mixed tick calls it once at C ==
-    prefill_chunk with prefilling lanes at n_valid up to C and decoding
-    lanes at n_valid == 1 (ONE trace, ONE dispatch per tick).  Sampling is
-    fused into the program (no extra dispatch) and the cache buffers are
-    donated, so page pools update in place instead of being copied every
-    tick.
+    steady-state layers (fal/parallel-family connections; validated).  The
+    returned callable is phase-agnostic per SEGMENT: a prefilling lane's
+    segment spans up to ``prefill_chunk`` tokens, a decoding lane's exactly
+    one, in the SAME call (ONE trace, ONE dispatch per tick, FLOPs in live
+    tokens).  Sampling is fused into the program (no extra dispatch) and
+    the cache buffers are donated, so page pools update in place instead of
+    being copied every tick.
     """
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
     plan.validate(cfg)
 
-    def step(params, cache, tokens, pos, n_valid, block_tables,
-             temps, top_ks, top_ps, seeds, sample_pos):
-        batch = {"tokens": tokens, "pos": pos, "n_valid": n_valid,
-                 "block_tables": block_tables}
+    def step(params, cache, tokens, tok_slot, tok_pos, block_tables,
+             seg_last, temps, top_ks, top_ps, seeds, sample_pos):
+        batch = {"tokens": tokens, "tok_slot": tok_slot, "tok_pos": tok_pos,
+                 "block_tables": block_tables, "seg_last": seg_last}
         hidden, new_cache = M.paged_decode_step(params, cfg, batch, cache,
                                                 plan, want="hidden")
-        h_last = last_valid_logits(hidden, n_valid)            # (B, D)
-        logits = M.lm_head(params, cfg, h_last[:, None])[:, 0]  # (B, V)
+        h_seg = hidden[0, jnp.maximum(seg_last, 0)]              # (S, D)
+        logits = M.lm_head(params, cfg, h_seg[:, None])[:, 0]    # (S, V)
         nxt = jax.vmap(SP.sample_one)(logits, temps, top_ks, top_ps,
                                       seeds, sample_pos)
         return logits, nxt, new_cache
@@ -107,27 +113,77 @@ def make_paged_step(cfg, plan=None):
     return jax.jit(step, donate_argnums=(1,))
 
 
-def last_valid_logits(logits, n_valid):
-    """(B, C, *), (B,) -> (B, *): each request's trailing-axis row at its
-    last valid chunk lane (lane 0 for requests that sat out the tick).
-    Shape-generic over the trailing axis — the engine's program applies it
-    to hidden states before the LM head."""
-    last = jnp.clip(n_valid - 1, 0, logits.shape[1] - 1)
-    return jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+@dataclasses.dataclass(frozen=True)
+class PackedTick:
+    """One tick's flat token plan (host-side numpy, produced by
+    ``pack_tokens``).  ``tokens[t]`` is fed to lane ``tok_slot[t]`` at
+    logical position ``tok_pos[t]``; the padding tail carries tok_slot == 0
+    and tok_pos == -1.  ``seg_last[i]`` is the flat index of slot i's last
+    token (-1 when the slot sat the tick out) and ``n_taken[i]`` how many
+    tokens slot i advances; ``n_live == n_taken.sum() <= len(tokens)``."""
+    tokens: np.ndarray                 # (T,) int32
+    tok_slot: np.ndarray               # (T,) int32
+    tok_pos: np.ndarray                # (T,) int32
+    seg_last: np.ndarray               # (S,) int32
+    n_taken: np.ndarray                # (S,) int32
+    n_live: int
 
 
-def pack_chunks(token_lists, chunk, slots):
-    """Host-side chunk packing: per-slot lists of pending context tokens ->
-    (tokens (slots, chunk), n_valid (slots,)) numpy arrays.  Empty lists
-    (idle slots) get n_valid == 0; decode-phase lanes carry exactly one
-    token."""
-    toks = np.zeros((slots, chunk), np.int32)
-    n_valid = np.zeros((slots,), np.int32)
-    for i, lst in enumerate(token_lists):
-        n = min(len(lst), chunk)
-        toks[i, :n] = lst[:n]
-        n_valid[i] = n
-    return toks, n_valid
+def pack_tokens(token_lists, positions, decode_flags, budget,
+                prefill_cap=0) -> PackedTick:
+    """Pure host-side token packer: per-slot lists of pending context
+    tokens (empty for idle slots) at per-slot ``positions`` -> a
+    ``PackedTick`` over a flat ``(budget,)`` buffer.
+
+    Packing order and fairness:
+      * decode lanes (``decode_flags[i]``, exactly one pending token) are
+        packed FIRST, in slot order — one token each, never displaced by a
+        prefill burst;
+      * prefill lanes then split the remaining budget (optionally capped at
+        ``prefill_cap`` tokens total, 0 = uncapped): a first round grants
+        one token per lane in slot order so every lane stays live, a second
+        round fills lanes greedily in slot order.
+
+    Each packed slot's tokens are contiguous with monotone positions
+    ``positions[i] + arange(n_taken[i])``.  The caller guarantees
+    ``budget >= live decode lanes`` (the engine enforces budget >= slots).
+    """
+    S = len(token_lists)
+    take = np.zeros((S,), np.int32)
+    decode_ids = [i for i in range(S)
+                  if len(token_lists[i]) and decode_flags[i]]
+    prefill_ids = [i for i in range(S)
+                   if len(token_lists[i]) and not decode_flags[i]]
+    left = budget - len(decode_ids)
+    assert left >= 0, "token budget below live decode lanes"
+    take[decode_ids] = 1
+    pleft = min(left, prefill_cap) if prefill_cap else left
+    for i in prefill_ids:                       # round 1: liveness
+        if pleft <= 0:
+            break
+        take[i] = 1
+        pleft -= 1
+    for i in prefill_ids:                       # round 2: greedy fill
+        if pleft <= 0:
+            break
+        extra = min(len(token_lists[i]) - int(take[i]), pleft)
+        take[i] += extra
+        pleft -= extra
+    tokens = np.zeros((budget,), np.int32)
+    tok_slot = np.zeros((budget,), np.int32)
+    tok_pos = np.full((budget,), -1, np.int32)
+    seg_last = np.full((S,), -1, np.int32)
+    off = 0
+    for i in decode_ids + prefill_ids:
+        n = int(take[i])
+        if n == 0:
+            continue
+        tokens[off:off + n] = token_lists[i][:n]
+        tok_slot[off:off + n] = i
+        tok_pos[off:off + n] = positions[i] + np.arange(n)
+        off += n
+        seg_last[i] = off - 1
+    return PackedTick(tokens, tok_slot, tok_pos, seg_last, take, off)
 
 
 @dataclasses.dataclass
@@ -161,7 +217,15 @@ class EngineConfig:
     page_size: int = 16
     num_pages: int = 64                # pool size incl. scratch page 0
     slots: int = 4                     # concurrent batch lanes
-    prefill_chunk: int = 16            # tokens per prefill dispatch
+    prefill_chunk: int = 16            # max prefill tokens per lane per tick
+    # flat tokens per packed dispatch; 0 = auto (slots + prefill_chunk - 1:
+    # one full prefill chunk plus a decode token for every other lane).
+    # Must cover at least one token per slot (liveness)
+    token_budget: int = 0
+    # fairness knob: cap on TOTAL prefill tokens per tick so a prefill
+    # burst can never crowd decode lanes out of the budget (0 = uncapped;
+    # decode lanes are packed first regardless)
+    max_prefill_tokens: int = 0
     max_seq: int = 256                 # per-request context cap
     admission: str = "prompt"          # 'prompt' | 'full'
     cache_dtype: str = "float32"
@@ -196,6 +260,12 @@ class PagedEngine:
                 "need image_embeds plumbed through ServeRequest")
         assert engine_cfg.admission in ("prompt", "full"), engine_cfg.admission
         self.cfg, self.params, self.ecfg = cfg, params, engine_cfg
+        self.budget = engine_cfg.token_budget or (
+            engine_cfg.slots + engine_cfg.prefill_chunk - 1)
+        if self.budget < engine_cfg.slots:
+            raise ValueError(
+                f"token_budget={self.budget} cannot keep all "
+                f"{engine_cfg.slots} slots live (need >= slots)")
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         # the engine stores a typed plan, not a context dict; every jitted
@@ -209,7 +279,7 @@ class PagedEngine:
         self.cache = M.init_paged_cache(
             cfg, engine_cfg.num_pages, engine_cfg.page_size,
             engine_cfg.slots, engine_cfg.cache_dtype)
-        self.step_fn = make_paged_step(cfg, self.plan)
+        self.step_fn = make_packed_step(cfg, self.plan)
         self.allocator = PageAllocator(engine_cfg.num_pages,
                                        engine_cfg.page_size,
                                        metrics=self.metrics)
@@ -219,7 +289,7 @@ class PagedEngine:
         self.queue: List[ServeRequest] = []
         self.finished: List[ServeRequest] = []
         self.ticks = 0
-        self.mixed_calls = 0
+        self.packed_calls = 0
         self.dispatches = 0
         self.dispatch_ticks = 0        # ticks that issued >= 1 dispatch
         self._arrival = 0
@@ -228,8 +298,8 @@ class PagedEngine:
             "engine_ticks_total", unit="ticks", site=_SITE)
         self._c_dispatches = self.metrics.counter(
             "engine_dispatches_total", unit="calls", site=_SITE)
-        self._c_mixed = self.metrics.counter(
-            "engine_mixed_calls_total", unit="calls", site=_SITE)
+        self._c_packed = self.metrics.counter(
+            "engine_packed_calls_total", unit="calls", site=_SITE)
         self._c_prefill_toks = self.metrics.counter(
             "engine_prefill_tokens_total", unit="tokens", site=_SITE)
         self._c_decode_toks = self.metrics.counter(
@@ -258,6 +328,10 @@ class PagedEngine:
             "engine_request_latency_ticks", unit="ticks", site=_SITE)
         self._h_dispatch_ms = self.metrics.histogram(
             "engine_dispatch_ms", unit="ms", site=_SITE)
+        self._h_tok_disp = self.metrics.histogram(
+            "engine_tokens_per_dispatch", unit="tokens", site=_SITE)
+        self._h_pad_frac = self.metrics.histogram(
+            "engine_padding_fraction", unit="ratio", site=_SITE)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest):
@@ -379,45 +453,64 @@ class PagedEngine:
             "req", r.rid, outcome="truncated" if truncated else "finished")
 
     # ------------------------------------------------------------------ #
-    def _run_call(self, ids: List[int], chunk: int):
-        """One jitted engine call (forward + fused sampling) over the given
-        participating slots; consume samples for every request whose context
-        completed this call.  Lanes may be in DIFFERENT phases: each lane
-        advances min(chunk, its remaining context) tokens."""
-        B = self.ecfg.slots
+    def _plan_pack(self) -> PackedTick:
+        """Pack this tick's pending context into one flat token buffer:
+        each active lane offers up to ``prefill_chunk`` tokens (exactly one
+        when decoding) and ``pack_tokens`` fits them into the engine's
+        token budget, decode lanes first."""
+        lists, poss, dec = [], [], []
+        for r in self.slots:
+            if r is None:
+                lists.append([])
+                poss.append(0)
+                dec.append(False)
+                continue
+            lists.append(r.known()[r.pos:r.pos + self.ecfg.prefill_chunk])
+            poss.append(r.pos)
+            dec.append(len(r.known()) - r.pos == 1)
+        return pack_tokens(lists, poss, dec, self.budget,
+                           self.ecfg.max_prefill_tokens)
+
+    def _run_packed(self, pt: PackedTick):
+        """One jitted engine call (forward + fused sampling) over a packed
+        token buffer; consume samples for every request whose context
+        completed this call.  Lanes may be in DIFFERENT phases: lane i
+        advances its ``pt.n_taken[i]`` packed tokens."""
+        S = self.ecfg.slots
+        ids = [i for i in range(S) if pt.n_taken[i] > 0]
         self.dispatches += 1
         self._c_dispatches.inc()
-        self._h_occ.record(len(ids) / B)
-        lists = [self.slots[i].known()[self.slots[i].pos:
-                                       self.slots[i].pos + chunk]
-                 if i in ids else [] for i in range(B)]
-        toks, n_valid = pack_chunks(lists, chunk, B)
-        pos = np.asarray([r.pos if r else 0 for r in self.slots], np.int32)
+        self._h_occ.record(len(ids) / S)
+        T = pt.tokens.shape[0]
+        self._h_tok_disp.record(pt.n_live)
+        self._h_pad_frac.record(1.0 - pt.n_live / T)
         bt = np.stack([t.as_row() for t in self.tables])
-        temps = np.zeros((B,), np.float32)
-        ks = np.zeros((B,), np.int32)
-        ps = np.ones((B,), np.float32)
-        seeds = np.zeros((B,), np.int32)
-        poss = np.zeros((B,), np.int32)
+        temps = np.zeros((S,), np.float32)
+        ks = np.zeros((S,), np.int32)
+        ps = np.ones((S,), np.float32)
+        seeds = np.zeros((S,), np.int32)
+        poss = np.zeros((S,), np.int32)
         for i in ids:
             sp = self.slots[i].sampling
             temps[i], ks[i], ps[i] = sp.temperature, sp.top_k, sp.top_p
             seeds[i] = sp.seed
             # position of the would-be new token (== len(known()) exactly
             # when this call completes the request's context)
-            poss[i] = self.slots[i].pos + int(n_valid[i])
+            poss[i] = self.slots[i].pos + int(pt.n_taken[i])
         t0 = time.perf_counter()
         with self.tracer.span("engine.dispatch", annotate=True,
-                              lanes=len(ids), chunk=chunk):
+                              lanes=len(ids), live_tokens=pt.n_live,
+                              budget=T):
             _, nxt, self.cache = self.step_fn(
-                self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-                jnp.asarray(n_valid), jnp.asarray(bt), jnp.asarray(temps),
-                jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds),
-                jnp.asarray(poss))
+                self.params, self.cache, jnp.asarray(pt.tokens),
+                jnp.asarray(pt.tok_slot), jnp.asarray(pt.tok_pos),
+                jnp.asarray(bt), jnp.asarray(pt.seg_last),
+                jnp.asarray(temps), jnp.asarray(ks), jnp.asarray(ps),
+                jnp.asarray(seeds), jnp.asarray(poss))
         self._h_dispatch_ms.record((time.perf_counter() - t0) * 1e3)
         for i in ids:
             r = self.slots[i]
-            adv = int(n_valid[i])
+            adv = int(pt.n_taken[i])
             if len(r.known()) - r.pos == 1:
                 self._c_decode_toks.inc(adv)
             else:
@@ -448,34 +541,46 @@ class PagedEngine:
 
     # ------------------------------------------------------------------ #
     def step(self):
-        """One engine tick: admit, then ONE mixed dispatch serving every
+        """One engine tick: admit, then ONE packed dispatch serving every
         active lane at its own phase."""
         self.ticks += 1
         self._c_ticks.inc()
         with self.tracer.span("engine.tick", tick=self.ticks):
             self._admit()
             d0 = self.dispatches
-            self._step_mixed()
+            self._step_packed()
             if self.dispatches > d0:
                 self.dispatch_ticks += 1
             self._h_util.record(self.allocator.stats()["utilization"])
 
-    def _step_mixed(self):
-        """ONE (slots, prefill_chunk) dispatch: prefilling lanes advance up
-        to ``prefill_chunk`` positions, decoding lanes advance 1, in the
-        same jitted call."""
-        chunk = self.ecfg.prefill_chunk
-        for i, r in enumerate(self.slots):
-            if r is None:
-                continue
-            feed = min(chunk, len(r.known()) - r.pos)
-            if not self._ensure(i, r.pos + feed):
-                pass                          # slot preempted/truncated
-        ids = [i for i, r in enumerate(self.slots) if r is not None]
-        if ids:
-            self.mixed_calls += 1
-            self._c_mixed.inc()
-            self._run_call(ids, chunk)
+    def _step_packed(self):
+        """ONE flat (token_budget,) dispatch: prefilling lanes advance up
+        to ``prefill_chunk`` packed tokens, decoding lanes advance 1, in
+        the same jitted call.  Page growth (``_ensure``) can preempt or
+        truncate lanes mid-plan; every eviction frees budget, so the pack
+        is re-planned until the surviving lanes' plan sticks (each
+        non-final iteration empties at least one slot, bounding the loop
+        at slots + 1)."""
+        for _ in range(self.ecfg.slots + 1):
+            pt = self._plan_pack()
+            if pt.n_live == 0:
+                return
+            replan = False
+            for i in range(self.ecfg.slots):
+                if pt.n_taken[i] == 0 or self.slots[i] is None:
+                    continue
+                if not self._ensure(i, self.slots[i].pos
+                                    + int(pt.n_taken[i])):
+                    replan = True             # slot i preempted/truncated
+                    break
+            # _ensure can also evict OTHER packed lanes as victims
+            if not replan and all(
+                    self.slots[i] is not None
+                    for i in range(self.ecfg.slots) if pt.n_taken[i] > 0):
+                self.packed_calls += 1
+                self._c_packed.inc()
+                self._run_packed(pt)
+                return
 
     def run(self, max_ticks: Optional[int] = None) -> List[ServeRequest]:
         while any(s is not None for s in self.slots) or self.queue:
@@ -490,7 +595,7 @@ class PagedEngine:
         keeping compiled programs, live requests and page state (benchmarks
         call this after warmup)."""
         self.ticks = 0
-        self.mixed_calls = 0
+        self.packed_calls = 0
         self.dispatches = self.dispatch_ticks = 0
         self.metrics.reset()
         self.tracer.clear()
@@ -507,17 +612,24 @@ class PagedEngine:
 
         return {
             "ticks": self.ticks,
-            "mixed_calls": self.mixed_calls,
+            "packed_calls": self.packed_calls,
             "dispatches": self.dispatches,
             "dispatch_ticks": self.dispatch_ticks,
-            # the tentpole metric, over ticks that issued any dispatch (a
-            # tick whose only lane was truncated/preempted mid-growth
-            # legitimately issues none): EXACTLY 1.0 under mixed ticks
+            # over ticks that issued any dispatch (a tick whose only lane
+            # was truncated/preempted mid-growth legitimately issues
+            # none): EXACTLY 1.0 under packed ticks
             "dispatches_per_tick":
                 self.dispatches / max(self.dispatch_ticks, 1),
-            # active lanes per dispatch / slots: mixed ticks keep every
-            # occupied lane advancing in every dispatch
+            # active lanes per dispatch / slots: packed ticks keep every
+            # occupied lane advancing in every dispatch (modulo the
+            # prefill-token fairness cap)
             "mean_occupancy": self._h_occ.mean,
+            # the tentpole metrics: live tokens per flat dispatch and the
+            # fraction of the buffer burned as padding (the padded layout
+            # pays ~ 1 - (slots + chunk - 1)/(slots * chunk) here)
+            "token_budget": self.budget,
+            "tokens_per_dispatch": pcts(self._h_tok_disp),
+            "padding_fraction": pcts(self._h_pad_frac),
             "prefill_tokens": self._c_prefill_toks.value,
             "decode_tokens": self._c_decode_toks.value,
             "preemptions": self._c_preempt.value,

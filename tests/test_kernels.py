@@ -137,6 +137,69 @@ def test_paged_chunk_attention_c1_matches_decode_kernel():
     assert jnp.max(jnp.abs(chunk[:, 0] - dec)) < 2e-5
 
 
+@pytest.mark.parametrize("budget", [8, 16])
+def test_paged_packed_attention_sweep(budget):
+    """Packed ragged kernel vs its gather oracle: one flat token buffer
+    holding a prefill segment that straddles a page boundary, a mid-page
+    decode segment, and a padding tail (tok_pos == -1)."""
+    S, H, Hkv, D, page, T = 3, 8, 2, 32, 8, 6
+    P = T * S + 2
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (budget, H, D))
+    k_pages = jax.random.normal(ks[1], (P, page, Hkv, D))
+    v_pages = jax.random.normal(ks[2], (P, page, Hkv, D))
+    bt = jnp.asarray(np.arange(1, 1 + S * T).reshape(S, T), jnp.int32)
+    # slot 0: 6-token prefill segment crossing the first page boundary;
+    # slot 1: decode segment (1 token) mid-page; slot 2 sits out; padding
+    # tail belongs to slot 0 but carries tok_pos == -1
+    tok_slot = jnp.asarray([0] * 6 + [1] + [0] * (budget - 7), jnp.int32)
+    tok_pos = jnp.asarray(list(range(page - 3, page + 3)) + [2 * page + 5]
+                          + [-1] * (budget - 7), jnp.int32)
+    out = PA.paged_packed_attention(q, k_pages, v_pages, bt, tok_slot,
+                                    tok_pos, interpret=True)
+    ref = R.paged_packed_attention_ref(q, k_pages, v_pages, bt, tok_slot,
+                                       tok_pos)
+    assert out.shape == (budget, H, D)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+    assert bool(jnp.all(out[7:] == 0))           # padding rows emit zeros
+    assert bool(jnp.all(ref[7:] == 0))
+
+
+def test_paged_packed_attention_t_eq_slots_matches_decode_kernel():
+    """The all-decode degenerate case (T == slots, one token per slot)
+    must agree with the single-token decode kernel contract
+    (seq_lens == tok_pos + 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    S, H, Hkv, D, page, T = 2, 4, 2, 32, 8, 3
+    q = jax.random.normal(ks[0], (S, H, D))
+    kp = jax.random.normal(ks[1], (S * T + 2, page, Hkv, D))
+    vp = jax.random.normal(ks[2], (S * T + 2, page, Hkv, D))
+    bt = jnp.asarray(np.arange(1, 1 + S * T).reshape(S, T), jnp.int32)
+    tok_slot = jnp.arange(S, dtype=jnp.int32)
+    tok_pos = jnp.asarray([10, page - 1], jnp.int32)
+    packed = PA.paged_packed_attention(q, kp, vp, bt, tok_slot, tok_pos,
+                                       interpret=True)
+    dec = PA.paged_decode_attention(q, kp, vp, bt, tok_pos + 1,
+                                    interpret=True)
+    assert jnp.max(jnp.abs(packed - dec)) < 2e-5
+
+
+def test_paged_packed_attention_ops_dispatch():
+    """CPU fallback (gather oracle) == interpret-mode packed kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (6, 4, 32))
+    k_pages = jax.random.normal(ks[1], (6, 8, 2, 32))
+    v_pages = jax.random.normal(ks[2], (6, 8, 2, 32))
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    tok_slot = jnp.asarray([0, 0, 0, 1, 0, 0], jnp.int32)
+    tok_pos = jnp.asarray([9, 10, 11, 3, -1, -1], jnp.int32)
+    a = ops.paged_packed_attention(q, k_pages, v_pages, bt, tok_slot,
+                                   tok_pos, use_pallas=False)
+    b = ops.paged_packed_attention(q, k_pages, v_pages, bt, tok_slot,
+                                   tok_pos, interpret=True)
+    assert jnp.max(jnp.abs(a - b)) < 2e-5
+
+
 def test_paged_chunk_attention_ops_dispatch():
     """CPU fallback (gather oracle) == interpret-mode chunked kernel."""
     ks = jax.random.split(jax.random.PRNGKey(6), 3)

@@ -250,7 +250,7 @@ def test_engine_stats_reset_zeroes_registry_and_trace():
 
 
 def test_kernel_dispatch_paths_runtime_measured():
-    """The engine run above traced the chunked paged-attention dispatcher;
+    """The engine run above traced the packed paged-attention dispatcher;
     on the CPU backend the registry must report cpu-fallback for it, and
     the trace-count counter must live in the default registry."""
     import jax
@@ -261,11 +261,11 @@ def test_kernel_dispatch_paths_runtime_measured():
                             max_new=3))
     eng.run()
     paths = ops.dispatch_paths()
-    assert "paged_chunk_attention" in paths
+    assert "paged_packed_attention" in paths
     if jax.default_backend() == "cpu":
-        assert paths["paged_chunk_attention"] == "cpu-fallback"
-    name = f"kernel_dispatch_total.paged_chunk_attention." \
-           f"{paths['paged_chunk_attention']}"
+        assert paths["paged_packed_attention"] == "cpu-fallback"
+    name = f"kernel_dispatch_total.paged_packed_attention." \
+           f"{paths['paged_packed_attention']}"
     assert default_registry().counter(name).value >= 1
     # engine stats' dispatch telemetry and BENCH stamping both read this map
     assert set(paths.values()) <= {"fused-tpu", "cpu-fallback"}

@@ -173,15 +173,79 @@ def test_paged_dual_branch_matches_dense_oracle(prompt, page_size):
     assert got == oracle, (prompt, page_size, got, oracle)
 
 
+@st.composite
+def _pack_inputs(draw):
+    """Per-slot pending-token lists with positions and decode flags, plus a
+    budget >= slots and an optional prefill cap."""
+    S = draw(st.integers(1, 6))
+    lanes = draw(st.lists(
+        st.tuples(st.integers(0, 12), st.booleans(), st.integers(0, 100)),
+        min_size=S, max_size=S))
+    lists, positions, flags = [], [], []
+    for n, dec, pos in lanes:
+        dec = dec and n > 0
+        n = 1 if dec else n          # decode lanes carry exactly one token
+        lists.append(list(range(pos, pos + n)))
+        positions.append(pos)
+        flags.append(dec)
+    budget = draw(st.integers(S, 40))
+    cap = draw(st.sampled_from([0, 0, 1, 2, 4, 8]))
+    return lists, positions, flags, budget, cap
+
+
+@given(_pack_inputs())
+@settings(max_examples=100, deadline=None)
+def test_pack_tokens_invariants(inp):
+    """The packer's contract: budget respected, decode lanes first, per-slot
+    segments contiguous with monotone positions, and a round-trip back to
+    the input lists."""
+    from repro.serve.scheduler import pack_tokens
+    lists, positions, flags, budget, cap = inp
+    pt = pack_tokens(lists, positions, flags, budget, cap)
+    S, T = len(lists), len(pt.tokens)
+    assert T == budget
+    assert pt.n_live == int(pt.n_taken.sum()) <= budget
+    n_decode = sum(1 for i in range(S) if flags[i] and lists[i])
+    if cap:
+        assert pt.n_live - n_decode <= cap       # prefill tokens capped
+    # decode lanes always packed, exactly one token, BEFORE prefill tokens
+    for i in range(S):
+        if flags[i] and lists[i]:
+            assert pt.n_taken[i] == 1
+    decode_idx = [t for t in range(pt.n_live) if flags[pt.tok_slot[t]]]
+    assert decode_idx == list(range(len(decode_idx)))
+    # liveness: uncapped, every non-empty lane advances (budget >= slots)
+    if not cap:
+        for i in range(S):
+            assert (pt.n_taken[i] > 0) == bool(lists[i])
+    # padding tail is inert; live region round-trips the inputs
+    assert np.all(pt.tok_pos[pt.n_live:] == -1)
+    assert np.all(pt.tok_pos[:pt.n_live] >= 0)
+    for i in range(S):
+        n = int(pt.n_taken[i])
+        sel = np.nonzero(pt.tok_slot[:pt.n_live] == i)[0]
+        assert len(sel) == n
+        assert n <= len(lists[i])
+        if n == 0:
+            assert pt.seg_last[i] == -1
+            continue
+        assert np.array_equal(sel, np.arange(sel[0], sel[0] + n))  # contiguous
+        assert pt.seg_last[i] == sel[-1]
+        assert np.array_equal(pt.tok_pos[sel],
+                              positions[i] + np.arange(n))  # monotone
+        assert list(pt.tokens[sel]) == lists[i][:n]          # round-trip
+
+
 @given(st.lists(st.integers(4, 12), min_size=2, max_size=3),
        st.integers(0, 2 ** 16))
 @settings(max_examples=6, deadline=None)
-def test_mixed_tick_engine_matches_dense_oracle(prompt_lens, seed):
-    """Random ragged prompts through the MIXED-tick engine on a page-starved
-    pool (3 slots competing for 4 pages, so long draws preempt and
-    re-admit): every request's greedy tokens must equal the dense
+def test_packed_tick_engine_matches_dense_oracle(prompt_lens, seed):
+    """Random ragged prompts through the token-PACKED-tick engine on a
+    page-starved pool (3 slots competing for 4 pages, so long draws preempt
+    and re-admit): every request's greedy tokens must equal the dense
     full-forward oracle token-for-token — the serving invariant with the
-    one-dispatch-per-tick program, preemption and re-prefill in the loop."""
+    one-dispatch-per-tick flat-buffer program, preemption and re-prefill in
+    the loop."""
     from repro.models import model as M
     from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
     cfg, params = _dual_oracle_cfg_params()

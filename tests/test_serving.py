@@ -1,8 +1,9 @@
 """Paged serving engine: paged decode == full forward, chunk-width
 invariance, FAL-signal caching, preemption->resume determinism, sampling
-reproducibility, dual-branch (MHA||MLP) continuous batching, MIXED ticks
-(one (slots, C) dispatch per engine step serving prefill + decode lanes
-together, token streams invariant to the compiled chunk width), and
+reproducibility, dual-branch (MHA||MLP) continuous batching, token-PACKED
+ticks (one flat (token_budget,) dispatch per engine step serving prefill +
+decode lanes together over ragged segments, token streams invariant to the
+compiled chunk width AND to a padded (slots*chunk,) reference layout), and
 allocator bookkeeping."""
 import jax
 import jax.numpy as jnp
@@ -239,16 +240,48 @@ def test_paged_a1_sig_kept_for_inactive_slots():
 
 
 # --------------------------------------------------------------------------- #
-# mixed ticks: ONE (slots, C) dispatch per engine step
+# packed ticks: ONE flat (token_budget,) dispatch per engine step
 # --------------------------------------------------------------------------- #
 SIX_STYLES = ("preln", "parallel", "fal", "falplus", "ablation1", "ablation2")
 
 
+class _PaddedTickEngine(PagedEngine):
+    """Reference engine reproducing the pre-packing padded tick layout:
+    every tick dispatches a flat (slots * prefill_chunk,) buffer where lane
+    i occupies [i*chunk, (i+1)*chunk) and its unused tail rides as padding
+    (tok_pos == -1).  Same tokens as the packed engine, padded FLOPs —
+    the baseline the packed layout is measured against (kept OUT of
+    src/repro/serve/, which CI greps clean of pad-out)."""
+
+    def _plan_pack(self):
+        from repro.serve.scheduler import PackedTick
+        S, C = self.ecfg.slots, self.ecfg.prefill_chunk
+        tokens = np.zeros((S * C,), np.int32)
+        tok_slot = np.repeat(np.arange(S, dtype=np.int32), C)
+        tok_pos = np.full((S * C,), -1, np.int32)
+        seg_last = np.full((S,), -1, np.int32)
+        n_taken = np.zeros((S,), np.int32)
+        live = 0
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            rem = r.known()[r.pos:r.pos + C]
+            n = len(rem)
+            if n == 0:
+                continue
+            tokens[i * C:i * C + n] = rem
+            tok_pos[i * C:i * C + n] = r.pos + np.arange(n)
+            seg_last[i] = i * C + n - 1
+            n_taken[i] = n
+            live += n
+        return PackedTick(tokens, tok_slot, tok_pos, seg_last, n_taken, live)
+
+
 def _engine_tokens(cfg, params, *, num_pages=48, n=6, slots=4,
-                   dual=False, chunk=8):
-    eng = PagedEngine(cfg, params, EngineConfig(
+                   dual=False, chunk=8, cls=PagedEngine, **ecfg_kw):
+    eng = cls(cfg, params, EngineConfig(
         page_size=8, num_pages=num_pages, slots=slots, prefill_chunk=chunk,
-        max_seq=64, dual_branch=dual))
+        max_seq=64, dual_branch=dual, **ecfg_kw))
     for r in _reqs(cfg, n=n):
         eng.submit(r)
     done = eng.run()
@@ -257,11 +290,11 @@ def _engine_tokens(cfg, params, *, num_pages=48, n=6, slots=4,
 
 
 @pytest.mark.parametrize("conn", SIX_STYLES)
-def test_mixed_tick_chunk_invariance_styles(conn):
+def test_packed_tick_chunk_invariance_styles(conn):
     """Token streams must be invariant to the compiled chunk width for
-    every connection style — a chunk=1 engine compiles a (slots, 1)
+    every connection style — a chunk=1 engine compiles a flat (slots,)
     program (pure token-at-a-time, the seed semantics), a chunk=8 engine
-    a (slots, 8) mixed program; both must emit identical tokens with
+    a (slots + 7,) packed program; both must emit identical tokens with
     exactly one dispatch per tick."""
     cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -269,8 +302,55 @@ def test_mixed_tick_chunk_invariance_styles(conn):
     mix, eng = _engine_tokens(cfg, params, chunk=8)
     assert mix == narrow, conn
     st = eng.stats()
-    assert st["dispatches"] == st["ticks"] == st["mixed_calls"]
+    assert st["dispatches"] == st["ticks"] == st["packed_calls"]
     assert st["dispatches_per_tick"] == 1.0
+
+
+@pytest.mark.parametrize("conn", SIX_STYLES)
+def test_packed_tick_matches_padded_baseline(conn):
+    """The tentpole identity: the packed (token_budget,) engine must emit
+    exactly the tokens of the padded (slots*chunk,) reference layout for
+    every connection style, while burning a fraction of its padding."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    packed, ep = _engine_tokens(cfg, params, chunk=8)
+    padded, eb = _engine_tokens(cfg, params, chunk=8, cls=_PaddedTickEngine)
+    assert packed == padded, conn
+    sp, sb = ep.stats(), eb.stats()
+    assert sp["dispatches_per_tick"] == sb["dispatches_per_tick"] == 1.0
+    # packed budget (slots + chunk - 1 = 11) vs padded rectangle (32)
+    assert sp["token_budget"] == 11
+    assert sp["padding_fraction"]["mean"] < sb["padding_fraction"]["mean"]
+
+
+def test_packed_tick_matches_padded_baseline_preempt_dual():
+    """Packed == padded under page pressure (preemption + re-prefill) with
+    the dual-branch dispatch in the loop."""
+    cfg, params = _cfg_params()
+    packed, ep = _engine_tokens(cfg, params, chunk=8, num_pages=9, n=10,
+                                dual=True)
+    padded, eb = _engine_tokens(cfg, params, chunk=8, num_pages=9, n=10,
+                                dual=True, cls=_PaddedTickEngine)
+    assert ep.stats()["preemptions"] > 0
+    assert packed == padded
+
+
+def test_packed_tick_token_budget_and_fairness():
+    """An explicit token_budget and the max_prefill_tokens fairness cap
+    change pacing, never tokens; an infeasible budget (< slots) is
+    rejected at construction."""
+    cfg, params = _cfg_params()
+    base, _ = _engine_tokens(cfg, params, chunk=8)
+    wide, _ = _engine_tokens(cfg, params, chunk=8, token_budget=32)
+    capped, eng = _engine_tokens(cfg, params, chunk=8, max_prefill_tokens=2)
+    assert wide == base and capped == base
+    # the cap throttles prefill: at most 2 prefill tokens join any dispatch
+    assert eng.stats()["tokens_per_dispatch"]["p99"] <= \
+        eng.ecfg.slots + 2
+    with pytest.raises(ValueError):
+        PagedEngine(cfg, params, EngineConfig(
+            page_size=8, num_pages=48, slots=4, prefill_chunk=8,
+            token_budget=3, max_seq=64))
 
 
 @pytest.mark.parametrize("arch,family", [
@@ -278,7 +358,7 @@ def test_mixed_tick_chunk_invariance_styles(conn):
     ("deepseek-v3-671b", "moe"),           # MLA latent pages ride mixed too
     ("llava-next-mistral-7b", "vlm"),
 ])
-def test_mixed_tick_chunk_invariance_families(arch, family):
+def test_packed_tick_chunk_invariance_families(arch, family):
     """Same engine-level invariant across the decoder families (vlm served
     text-only — the engine's request plumbing contract)."""
     cfg = get_config(arch).reduced().replace(connection="fal")
@@ -292,8 +372,8 @@ def test_mixed_tick_chunk_invariance_families(arch, family):
     assert eng.stats()["dispatches_per_tick"] == 1.0
 
 
-def test_mixed_tick_preemption_resume_chunk_invariant():
-    """Page pressure under mixed ticks: preempted/re-admitted requests must
+def test_packed_tick_preemption_resume_chunk_invariant():
+    """Page pressure under packed ticks: preempted/re-admitted requests must
     still produce exactly the unconstrained chunk=1 engine's tokens
     (position-derived sampling keys + re-prefill make the resume
     deterministic)."""
@@ -305,8 +385,8 @@ def test_mixed_tick_preemption_resume_chunk_invariant():
     assert mix == narrow
 
 
-def test_mixed_tick_dual_branch_engine():
-    """dual_branch composes with mixed ticks (branch-parallel at op
+def test_packed_tick_dual_branch_engine():
+    """dual_branch composes with packed ticks (branch-parallel at op
     level): same tokens, still one dispatch per tick."""
     cfg, params = _cfg_params()
     seq, _ = _engine_tokens(cfg, params)
@@ -316,9 +396,9 @@ def test_mixed_tick_dual_branch_engine():
     assert dual == seq
 
 
-def test_mixed_tick_compiles_one_program(monkeypatch):
+def test_packed_tick_compiles_one_program(monkeypatch):
     """The tentpole contract, asserted via trace counting: the engine
-    traces its jitted step exactly ONCE — a single (slots, prefill_chunk)
+    traces its jitted step exactly ONCE — a single flat (token_budget,)
     program serves every tick, whatever mix of phases the lanes are in."""
     cfg, params = _cfg_params()
     traces = []
@@ -331,16 +411,16 @@ def test_mixed_tick_compiles_one_program(monkeypatch):
     monkeypatch.setattr(M, "paged_decode_step", counting)
 
     _, eng = _engine_tokens(cfg, params, chunk=8)
-    assert traces == [(4, 8)], traces          # ONE trace: (slots, chunk)
+    assert traces == [(11,)], traces     # ONE trace: slots + chunk - 1
     st = eng.stats()
-    assert st["mixed_calls"] == st["ticks"] and st["dispatches_per_tick"] == 1
+    assert st["packed_calls"] == st["ticks"] and st["dispatches_per_tick"] == 1
 
     traces.clear()
     _engine_tokens(cfg, params, chunk=1)
-    assert traces == [(4, 1)], traces          # narrow engine: ONE program too
+    assert traces == [(4,)], traces      # narrow engine: ONE program too
 
 
-def test_mixed_tick_occupancy_counts_active_lanes():
+def test_packed_tick_occupancy_counts_active_lanes():
     """Occupancy = active lanes / slots per dispatch; a lone request in a
     4-slot engine must report 0.25, full slots report 1.0."""
     cfg, params = _cfg_params()
