@@ -25,6 +25,14 @@ baseline is the padded reference layout, compared where it matters:
     driven through a padded-reference engine (the pre-packing layout,
     defined HERE so src/repro/serve/ stays free of pad-out code) and CI
     gates packed tok/s >= padded tok/s with identical token streams.
+  * ``repeated_prefix`` (label ``repeated-prefix``) — N requests sharing
+    one long page-aligned system prompt (Poisson arrivals after a cold
+    donor): the SAME workload through a prefix-cached engine and a cold
+    one.  Hits map the cached KV pages (refcount shares), prefill only
+    their divergence suffix and seed the FAL first-attention signal from
+    the cached prefix; full-prompt hits enter decode on their first tick.
+    Token identity hot-vs-cold asserted; CI gates
+    ``prefix_hit_rate > 0.9`` and hot-hit TTFT < cold TTFT here.
   * ``dual``  — (``--dual``) the dual-branch (MHA||MLP) engine: each
     steady-state block's FFN issued off the cached per-slot
     first-attention signal concurrently with the paged KV gather; asserts
@@ -137,6 +145,33 @@ def _workload(vocab, n_requests=12, seed=0, rate=0.5, prompt_lo=32,
     ]
 
 
+def _prefix_workload(vocab, page, n_requests=16, seed=7, rate=1.0,
+                     sys_pages=4, tail_lo=8, tail_hi=17, full_every=5):
+    """N requests sharing one page-aligned system prompt.  Request 0 is
+    the cold donor: it arrives alone and finishes before anyone else
+    arrives, so every later admission can hit its parked prefix.  The
+    rest arrive Poisson with unique short tails — and every
+    ``full_every``-th reuses the system prompt VERBATIM, the full-prompt
+    hit shape that enters decode on its first tick."""
+    rng = np.random.default_rng(seed)
+    sysp = rng.integers(0, vocab, sys_pages * page)
+    work = [{"rid": 0, "arrival_tick": 0,
+             "prompt": np.concatenate([sysp, rng.integers(0, vocab, 12)]),
+             "max_new": 4}]
+    # donor: 76 prefill tokens (3 chunks at chunk=32) + 4 decode ticks,
+    # parked at finish — a 16-tick gap keeps every follower behind it
+    arrivals = 16 + np.cumsum(
+        rng.exponential(1.0 / rate, n_requests - 1)).astype(int)
+    for i in range(1, n_requests):
+        prompt = (sysp.copy() if i % full_every == 0 else
+                  np.concatenate([sysp, rng.integers(
+                      0, vocab, int(rng.integers(tail_lo, tail_hi)))]))
+        work.append({"rid": i, "arrival_tick": int(arrivals[i - 1]),
+                     "prompt": prompt,
+                     "max_new": int(rng.integers(8, 17))})
+    return sysp, work
+
+
 def _drive(submit, step, pending, active_or_queued):
     """Tick loop feeding arrivals at their scheduled tick; returns
     (wall seconds, ticks driven)."""
@@ -172,6 +207,34 @@ def _run_paged(cfg, params, work, ecfg, tracer=None, cls=PagedEngine):
     # reset also drops the warmup's trace events so the exported trace
     # holds exactly the timed workload)
     eng.finished.clear()
+    eng.reset_stats()
+
+    def submit(w, tick):
+        eng.submit(ServeRequest(rid=w["rid"], prompt=w["prompt"],
+                                max_new=w["max_new"]))
+
+    dt, _ = _drive(
+        submit, eng.step, list(work),
+        lambda: eng.queue or any(s is not None for s in eng.slots))
+    return dt, eng.finished, eng.stats()
+
+
+def _run_prefix(cfg, params, work, ecfg):
+    """Drive ``work`` through a fresh engine, warming up with TWO
+    identical page-aligned prompts run back-to-back: the first traces the
+    packed program, the second (a full-prompt hit when the prefix cache
+    is on) traces the decode-entry tick AND the copy-on-write page-copy
+    program — nothing in the timed region compiles cold.  Tree + stats
+    are reset after warmup so the timed hit rate starts from an empty
+    radix tree."""
+    eng = PagedEngine(cfg, params, ecfg)
+    wp = np.arange(48) % cfg.vocab          # 3 pages at page_size 16
+    for rid in (-1, -2):
+        eng.submit(ServeRequest(rid=rid, prompt=wp.copy(), max_new=4))
+        eng.run()
+    eng.finished.clear()
+    if eng.pcache is not None:
+        eng.pcache.clear()
     eng.reset_stats()
 
     def submit(w, tick):
@@ -361,6 +424,67 @@ def bench(csv, dual=False, trace=False, trace_out="TRACE_serving.json"):
         "padded_padding_fraction": st_b["padding_fraction"],
         "dispatches_per_tick": st_p["dispatches_per_tick"],
         "workload": decode_kw,
+    }
+
+    # ---- repeated-prefix load: radix prefix cache + COW page sharing -----
+    # N requests sharing one page-aligned system prompt, Poisson arrivals
+    # behind a cold donor; the SAME workload through a prefix-cached
+    # engine and a cold reference.  Hits adopt the cached KV pages and
+    # prefill only their divergence suffix (full-prompt hits enter decode
+    # on tick one with the a1_sig seeded from the cached prefix), so the
+    # hot engine's prefill-token count collapses to roughly the tails.
+    sysp, work_pref = _prefix_workload(cfg.vocab, ecfg.page_size)
+    dt_h, done_h, st_h = _run_prefix(
+        cfg, params, work_pref,
+        dataclasses.replace(ecfg, prefix_cache=True))
+    dt_c, done_c, st_c = _run_prefix(cfg, params, work_pref, ecfg)
+    assert ({r.rid: r.generated for r in done_h}
+            == {r.rid: r.generated for r in done_c}), \
+        "prefix-cache hits changed the token stream"
+    pf = st_h["prefix"]
+    toks_h = sum(len(r.generated) for r in done_h)
+    toks_c = sum(len(r.generated) for r in done_c)
+    csv("serving_repeated_prefix", dt_h * 1e6,
+        f"tok_per_s_hot={toks_h/dt_h:.0f};"
+        f"tok_per_s_cold={toks_c/dt_c:.0f};"
+        f"prefix_hit_rate={pf['hit_rate']:.3f};"
+        f"prefill_tokens_hot={st_h['prefill_tokens']};"
+        f"prefill_tokens_cold={st_c['prefill_tokens']};"
+        f"ttft_hit_p50_ticks={pf['ttft_hit_ticks']['p50']:.0f};"
+        f"ttft_cold_ref_p50_ticks={st_c['ttft_ticks']['p50']:.0f};"
+        f"cow_copies={pf['cow_copies']};"
+        f"a1_sig_seeded={pf['a1_sig_seeded']};"
+        f"path={path}")
+    data["repeated_prefix"] = {
+        "workload_label": "repeated-prefix",
+        "requests": len(work_pref),
+        "system_prompt_tokens": len(sysp),
+        "prefix_hit_rate": pf["hit_rate"],
+        "hits": pf["hits"],
+        "misses": pf["misses"],
+        "hit_tokens_p50": pf["hit_tokens"]["p50"],
+        "cow_copies": pf["cow_copies"],
+        "a1_sig_seeded": pf["a1_sig_seeded"],
+        "inserted_pages": pf["inserted_pages"],
+        "evicted_pages": pf["evicted_pages"],
+        "cached_pages_end": pf["cached_pages"],
+        "prefill_tokens_saved":
+            st_c["prefill_tokens"] - st_h["prefill_tokens"],
+        "hot": {"tok_per_s": toks_h / dt_h,
+                "prefill_tokens": st_h["prefill_tokens"],
+                "prefill_tok_per_s": st_h["prefill_tokens"] / dt_h,
+                "ttft_p50_ticks": st_h["ttft_ticks"]["p50"],
+                "ttft_hit_p50_ticks": pf["ttft_hit_ticks"]["p50"],
+                "ttft_hit_p50_ms": pf["ttft_hit_ms"]["p50"],
+                "ttft_cold_p50_ticks": pf["ttft_cold_ticks"]["p50"],
+                "preemptions": st_h["preemptions"]},
+        "cold": {"tok_per_s": toks_c / dt_c,
+                 "prefill_tokens": st_c["prefill_tokens"],
+                 "prefill_tok_per_s": st_c["prefill_tokens"] / dt_c,
+                 "ttft_p50_ticks": st_c["ttft_ticks"]["p50"],
+                 "ttft_p50_ms": st_c["ttft_ms"]["p50"],
+                 "preemptions": st_c["preemptions"]},
+        "dispatch_path": path,
     }
 
     # ---- tracing overhead: identical burst workload, tracer attached -----

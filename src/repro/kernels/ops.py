@@ -174,6 +174,22 @@ def dual_branch_decode(q, k_pages, v_pages, block_tables, seq_lens, mlp_in,
     return attn, mlp_apply(ffn, mlp_in, kind)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def copy_pages(pool, src, dst, *, use_pallas=None, interpret=False):
+    """COW page duplication: pool (P, page, ...) with the full rows at
+    pages ``src`` (n,) copied over pages ``dst`` (n,) — the device memcpy
+    behind ``BlockTable`` copy-on-write (a write into a prefix-shared page
+    first lands the history on a private page).  Pallas in-place kernel on
+    TPU (pool aliased into the output); scatter-based jnp oracle on CPU
+    (identical bytes)."""
+    use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
+    _record_dispatch("copy_pages", use_pallas or interpret)
+    if use_pallas or interpret:
+        from repro.kernels import paged_attention as _pa
+        return _pa.page_copy(pool, src, dst, interpret=interpret)
+    return _ref.copy_pages_ref(pool, src, dst)
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",
                                              "interpret"))
 def fused_ln_add(x, a1n, scale, bias=None, *, kind="rmsnorm",

@@ -349,3 +349,49 @@ def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
     )(block_tables.astype(jnp.int32), tok_slot.astype(jnp.int32),
       tok_pos.astype(jnp.int32), qg, kt, vt)
     return out.reshape(T, H, Dv)
+
+
+def _page_copy_kernel(src_ref, dst_ref, x_ref, o_ref):
+    del src_ref, dst_ref
+    o_ref[...] = x_ref[...]
+
+
+def page_copy(pool, src, dst, *, interpret=False):
+    """Copy-on-write page duplication inside one KV pool: the full rows of
+    pages ``src`` (n,) are copied over pages ``dst`` (n,) in place.
+
+    pool: (P, page, ...) — any paged pool layout (K, V, MLA latent, ...);
+    src/dst: (n,) int32 physical page ids.  ``dst`` pages must be distinct
+    freshly-allocated targets; ``src`` pages may repeat.  Returns the pool
+    with the n page rows rewritten — the pool buffer is aliased into the
+    output (``input_output_aliases``), so pages outside ``dst`` are
+    untouched bytes, not recomputed copies.
+
+    Grid (n,): ``src``/``dst`` ride in as scalar-prefetch operands and the
+    in/out BlockSpec index maps address page ``src[i]`` / ``dst[i]``
+    directly, so each grid step is exactly one page-row DMA through VMEM —
+    the device-side memcpy behind ``BlockTable`` copy-on-write.
+    """
+    P, page = pool.shape[0], pool.shape[1]
+    tail = 1
+    for d in pool.shape[2:]:
+        tail *= d
+    flat = pool.reshape(P, page, tail)
+    n = src.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, page, tail), lambda i, s, d: (s[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, tail), lambda i, s, d: (d[i], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _page_copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), flat)
+    return out.reshape(pool.shape)

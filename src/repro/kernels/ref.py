@@ -128,6 +128,14 @@ def paged_packed_attention_ref(q, k_pages, v_pages, block_tables, tok_slot,
     return o.reshape(T, H, Dv).astype(q.dtype)
 
 
+def copy_pages_ref(pool, src, dst):
+    """Oracle for the COW page copy: pool (P, page, ...) with the full rows
+    at pages ``src`` (n,) written over the rows at pages ``dst`` (n,).
+    ``dst`` indices must be distinct (each COW target is a freshly
+    allocated page); ``src`` pages are read-only and may repeat."""
+    return pool.at[dst].set(pool[src])
+
+
 def ln_add_ref(x, a1n, scale, bias=None, *, kind="rmsnorm", eps=1e-6):
     xf = x.astype(jnp.float32)
     if kind == "layernorm":

@@ -926,6 +926,38 @@ def lm_head(params, cfg, x):
     return _logits(params, cfg, x)
 
 
+def copy_paged_pages(cache, src, dst):
+    """Copy-on-write page duplication across EVERY layer's KV pools: the
+    page rows at physical pages ``src`` (n,) are copied over pages ``dst``
+    (n,) in block 0's pools and all stacked upper-layer pools — the device
+    half of ``BlockTable`` COW (the host half swaps the block-table entry).
+
+    The stacked ``blocks`` leaves (L-1, P, page, ...) are copied in ONE
+    ``ops.copy_pages`` dispatch each by viewing them as (L-1)*P flat pages
+    and offsetting the page ids per layer.  The ``a1_sig`` buffer is
+    per-slot, not per-page — untouched.  Callers jit this with the cache
+    donated (the Pallas path aliases the pools in place)."""
+    from repro.kernels import ops as _ops
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def one(pool):
+        return _ops.copy_pages(pool, src, dst)
+
+    def stacked(pool):
+        L, P = pool.shape[0], pool.shape[1]
+        flat = pool.reshape((L * P,) + pool.shape[2:])
+        off = (jnp.arange(L, dtype=jnp.int32) * P)[:, None]
+        s = (src[None, :] + off).reshape(-1)
+        d = (dst[None, :] + off).reshape(-1)
+        return _ops.copy_pages(flat, s, d).reshape(pool.shape)
+
+    new = dict(cache)
+    new["block0"] = jax.tree.map(one, cache["block0"])
+    new["blocks"] = jax.tree.map(stacked, cache["blocks"])
+    return new
+
+
 def _mtp_loss(p, cfg, batch, hidden):
     """DeepSeek-V3 multi-token prediction: predict t+2 from h_t and emb_{t+1}."""
     tokens = batch["tokens"]

@@ -6,8 +6,10 @@ Three pieces, all off-by-default and cheap when off:
 * ``obs.trace``   — a low-overhead span/event tracer (monotonic clocks,
   context-manager API) exporting Chrome trace-event JSON loadable in
   Perfetto.  ``PagedEngine`` emits per-tick spans and per-request
-  lifecycle events (QUEUED -> ADMITTED -> PREFILL -> DECODE ->
-  PREEMPTED/requeued -> FINISHED); engine dispatches are additionally
+  lifecycle events (QUEUED -> ADMITTED [-> PREFIX_HIT] -> PREFILL ->
+  DECODE -> PREEMPTED/requeued -> FINISHED, plus COW / PREFIX_PARKED /
+  PREFIX_EVICT instants from the prefix-sharing subsystem); engine
+  dispatches are additionally
   wrapped in ``jax.profiler.TraceAnnotation`` so XLA device profiles line
   up with the engine spans.
 * ``obs.metrics`` — counters / gauges / log-bucket histograms with
@@ -46,9 +48,23 @@ engine_ttft_ticks                       histogram  ticks    serve/scheduler.py  
 engine_inter_token_ms                   histogram  ms       serve/scheduler.py  PagedEngine._run_packed
 engine_request_latency_ticks            histogram  ticks    serve/scheduler.py  PagedEngine._finish
 engine_dispatch_ms                      histogram  ms       serve/scheduler.py  PagedEngine._run_packed
+engine_cow_copies_total                 counter    pages    serve/scheduler.py  PagedEngine._ensure
+engine_a1_sig_seeded_total              counter    events   serve/scheduler.py  PagedEngine._admit
+engine_ttft_hit_ms                      histogram  ms       serve/scheduler.py  PagedEngine._run_packed
+engine_ttft_cold_ms                     histogram  ms       serve/scheduler.py  PagedEngine._run_packed
+engine_ttft_hit_ticks                   histogram  ticks    serve/scheduler.py  PagedEngine._run_packed
+engine_ttft_cold_ticks                  histogram  ticks    serve/scheduler.py  PagedEngine._run_packed
 pages_in_use                            gauge      pages    serve/paged_cache.py PageAllocator
+pages_shared                            gauge      pages    serve/paged_cache.py PageAllocator
 pages_alloc_total                       counter    pages    serve/paged_cache.py PageAllocator.alloc
 pages_free_total                        counter    pages    serve/paged_cache.py PageAllocator.free
+pages_shared_total                      counter    pages    serve/paged_cache.py PageAllocator.share
+prefix_hits_total                       counter    admissions serve/prefix_cache.py PrefixCache.note_admission
+prefix_misses_total                     counter    admissions serve/prefix_cache.py PrefixCache.note_admission
+prefix_hit_tokens                       histogram  tokens   serve/prefix_cache.py PrefixCache.note_admission
+prefix_inserted_pages_total             counter    pages    serve/prefix_cache.py PrefixCache.insert
+prefix_evicted_pages_total              counter    pages    serve/prefix_cache.py PrefixCache.evict
+prefix_cached_pages                     gauge      pages    serve/prefix_cache.py PrefixCache
 batcher_ticks_total                     counter    ticks    serve/decode.py     ContinuousBatcher.step
 batcher_dispatches_total                counter    calls    serve/decode.py     ContinuousBatcher.step
 batcher_occupancy                       histogram  ratio    serve/decode.py     ContinuousBatcher.step

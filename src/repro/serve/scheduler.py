@@ -31,11 +31,26 @@ engine with:
   * dual-branch decode (``EngineConfig.dual_branch``) — under fal/parallel
     connections the steady-state blocks issue the MLP branch off the cached
     per-slot FAL signal concurrently with the paged attention gather
-    (MHA||MLP, the paper's inference-side claim); bit-identical tokens.
+    (MHA||MLP, the paper's inference-side claim); bit-identical tokens;
+  * radix prefix caching (``EngineConfig.prefix_cache``) — finished
+    requests park their page-aligned prefixes (and the FAL ``a1_sig`` at
+    the prompt's last position) in ``serve/prefix_cache.py``; admission
+    longest-prefix matches the prompt, maps the cached PHYSICAL pages into
+    the new request's block table (refcounted by the allocator) and enters
+    prefill at the divergence point — or decode immediately on a
+    full-prompt hit, with ``cache["a1_sig"]`` seeded from the entry so the
+    first tick pays no block-0 assemble for the prefix.  Writes into a
+    shared page copy-on-write first (``model.copy_paged_pages`` device
+    memcpy + block-table swap), so a hit request can never corrupt another
+    sharer's history; preemption releases only the preempted request's
+    REFERENCES (shared pages survive in the tree), and its re-prefill
+    restarts at the still-cached prefix instead of token 0.
 
 The oldest active request can always claim pages from younger ones, so the
 engine makes progress whenever any single request fits the pool; requests
-that can never fit are rejected instead of deadlocking the queue.
+that can never fit are rejected instead of deadlocking the queue.  Under
+page pressure the relief order is: evict refcount-free prefix-cache
+entries first, then preempt the youngest other request, then self.
 
 Observability (``repro.obs``): the engine owns a ``MetricsRegistry`` —
 TTFT, inter-token latency, queue wait, occupancy, page utilization and
@@ -62,6 +77,7 @@ from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_TRACER
 from repro.serve import sampling as SP
 from repro.serve.paged_cache import BlockTable, PageAllocator, pages_needed
+from repro.serve.prefix_cache import PrefixCache
 
 _SITE = "serve/scheduler.py"
 
@@ -205,6 +221,13 @@ class ServeRequest:
     queued_tick: int = -1              # last (re-)queue tick, for queue wait
     last_token_time: float = 0.0
     decoding: bool = False             # per-residency phase (reset on preempt)
+    # prefix-cache plumbing (EngineConfig.prefix_cache)
+    pin_prefix: bool = False           # park this prefix pinned (no eviction)
+    prefix_hit_tokens: int = 0         # cached tokens mapped at last admission
+    # block 1's first-attention signal at position len(prompt)-1, captured
+    # the tick the first token is sampled; cached with the prefix so a
+    # full-prompt hit seeds cache["a1_sig"] instead of re-running block 0
+    prefix_sig: Optional[np.ndarray] = None
 
     def known(self) -> list:
         """Context to teacher-force: prompt + everything sampled so far."""
@@ -236,6 +259,13 @@ class EngineConfig:
     # is tolerance-close); the win is overlap of the paged KV gather with
     # the FFN matmuls.
     dual_branch: bool = False
+    # radix prefix cache over page-aligned finished prefixes: admission
+    # longest-prefix matches the prompt, shares the cached pages into the
+    # block table (COW on write) and seeds the FAL a1_sig on full-prompt
+    # hits.  max_cached_prefix_pages caps the tree's own page budget
+    # (0 = bounded only by the pool; LRU eviction under pressure either way)
+    prefix_cache: bool = False
+    max_cached_prefix_pages: int = 0
 
 
 class PagedEngine:
@@ -285,6 +315,15 @@ class PagedEngine:
                                        metrics=self.metrics)
         self.tables = [BlockTable(self.allocator, self.max_blocks)
                        for _ in range(engine_cfg.slots)]
+        self.pcache: Optional[PrefixCache] = None
+        self._cow_fn = None
+        if engine_cfg.prefix_cache:
+            self.pcache = PrefixCache(
+                self.allocator, max_pages=engine_cfg.max_cached_prefix_pages,
+                metrics=self.metrics, tracer=self.tracer)
+            # per-page device memcpy across every layer's pools; the cache
+            # is donated so the Pallas path rewrites the pools in place
+            self._cow_fn = jax.jit(M.copy_paged_pages, donate_argnums=(0,))
         self.slots: List[Optional[ServeRequest]] = [None] * engine_cfg.slots
         self.queue: List[ServeRequest] = []
         self.finished: List[ServeRequest] = []
@@ -332,6 +371,18 @@ class PagedEngine:
             "engine_tokens_per_dispatch", unit="tokens", site=_SITE)
         self._h_pad_frac = self.metrics.histogram(
             "engine_padding_fraction", unit="ratio", site=_SITE)
+        self._c_cow = self.metrics.counter(
+            "engine_cow_copies_total", unit="pages", site=_SITE)
+        self._c_sig_seeded = self.metrics.counter(
+            "engine_a1_sig_seeded_total", unit="events", site=_SITE)
+        self._h_ttft_hit_ms = self.metrics.histogram(
+            "engine_ttft_hit_ms", unit="ms", site=_SITE)
+        self._h_ttft_cold_ms = self.metrics.histogram(
+            "engine_ttft_cold_ms", unit="ms", site=_SITE)
+        self._h_ttft_hit_ticks = self.metrics.histogram(
+            "engine_ttft_hit_ticks", unit="ticks", site=_SITE)
+        self._h_ttft_cold_ticks = self.metrics.histogram(
+            "engine_ttft_cold_ticks", unit="ticks", site=_SITE)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest):
@@ -378,18 +429,55 @@ class PagedEngine:
                 self.queue.pop(0)
                 self._reject(r)
                 continue
-            if not self.allocator.can_alloc(need):
-                return                       # FCFS: no head-of-line skipping
+            # longest-prefix match; the provisional ``share`` keeps matched
+            # pages at refcount > 1 through any eviction below, so a
+            # just-matched node can never be freed out from under us
+            n_hit, hit_pages, hit_a1 = 0, [], {}
+            if self.pcache is not None and ctx > 1:
+                n_hit, hit_pages, hit_a1 = self.pcache.match(
+                    np.asarray(r.known(), np.int64))
+                if hit_pages:
+                    self.allocator.share(hit_pages)
+            need_new = need - len(hit_pages)
+            if not self.allocator.can_alloc(need_new):
+                if self.pcache is not None:
+                    self.pcache.evict(need_new - self.allocator.free_pages)
+                if not self.allocator.can_alloc(need_new):
+                    if hit_pages:           # drop the provisional hold
+                        self.allocator.free(hit_pages)
+                    return                   # FCFS: no head-of-line skipping
             self.queue.pop(0)
-            r.pos = 0                        # (re-)prefill from scratch
+            # (re-)prefill from the divergence point; a full-prompt hit
+            # (n_hit == ctx) enters decode on its first tick — the last
+            # prompt token runs as a one-token decode segment (its page is
+            # COW'd out of the shared span before the write)
+            r.pos = min(n_hit, ctx - 1)
             r.decoding = False
+            r.prefix_hit_tokens = n_hit
+            self.tables[free].adopt(hit_pages)
             self.slots[free] = r
             self._c_admitted.inc()
             self._h_queue_wait.record(self.ticks - r.queued_tick)
             self.tracer.instant("ADMITTED", rid=r.rid, slot=free,
                                 wait_ticks=self.ticks - r.queued_tick)
+            if self.pcache is not None:
+                self.pcache.note_admission(n_hit)
+            if n_hit:
+                self.tracer.instant("PREFIX_HIT", rid=r.rid, slot=free,
+                                    hit_tokens=n_hit,
+                                    shared_pages=len(hit_pages))
+                # seed the FAL signal from the cached entry on decode
+                # entry: the paper's redirected first-attention output at
+                # position pos is a pure function of tokens [0, pos], so
+                # the stored artifact replaces block 0's assemble
+                if r.pos == ctx - 1 and r.pos in hit_a1:
+                    sig = jnp.asarray(hit_a1[r.pos],
+                                      self.cache["a1_sig"].dtype)
+                    self.cache["a1_sig"] = \
+                        self.cache["a1_sig"].at[free].set(sig)
+                    self._c_sig_seeded.inc()
             self.tracer.instant("PREFILL", rid=r.rid, slot=free,
-                                context=ctx)
+                                context=ctx, from_pos=r.pos)
             if self.ecfg.admission == "full":
                 # reservation policy: actually hold the worst-case pages now
                 # so this request can never be preempted for page pressure
@@ -401,6 +489,10 @@ class PagedEngine:
     # ------------------------------------------------------------------ #
     def _preempt(self, i: int):
         r = self.slots[i]
+        # release() drops this request's REFERENCES only: pages shared with
+        # the prefix cache stay allocated (the tree's refcount holds them),
+        # so re-admission longest-prefix matches the still-cached prefix
+        # and re-prefills from the divergence point, not token 0
         self.tables[i].release()
         r.pos = 0
         r.decoding = False
@@ -419,10 +511,24 @@ class PagedEngine:
             return None
         return max(cands, key=lambda i: self.slots[i].arrival)  # youngest
 
+    def _relieve_pressure(self, exclude: int) -> bool:
+        """Free page capacity under pressure, cheapest first: evict
+        refcount-free prefix-cache entries (no recompute lost — only idle
+        cached prefixes), then preempt the youngest other active request.
+        False => nothing left to take (caller must preempt itself)."""
+        if self.pcache is not None and self.pcache.evict(1):
+            return True
+        victim = self._pick_victim(exclude=exclude)
+        if victim is None:
+            return False
+        self._preempt(victim)
+        return True
+
     def _ensure(self, i: int, new_len: int) -> bool:
-        """Grow slot i's block table to cover new_len tokens, evicting
-        younger requests under page pressure.  False => slot i was itself
-        preempted (or finished truncated) and is gone."""
+        """Grow slot i's block table to cover new_len tokens AND privatise
+        (copy-on-write) any prefix-shared page in this tick's write range
+        [pos, new_len), relieving page pressure as needed.  False => slot i
+        was itself preempted (or finished truncated) and is gone."""
         if pages_needed(new_len, self.ecfg.page_size) \
                 > min(self.max_blocks, self.allocator.capacity):
             # infeasible no matter how many victims are evicted (would
@@ -430,15 +536,64 @@ class PagedEngine:
             self._finish(i, truncated=True)
             return False
         while not self.tables[i].ensure(new_len):
-            victim = self._pick_victim(exclude=i)
-            if victim is None:
+            if not self._relieve_pressure(exclude=i):
                 self._preempt(i)
                 return False
-            self._preempt(victim)
-        return True
+        if self.pcache is None:
+            return True
+        # COW: the packed tick will scatter K/V for positions [pos,
+        # new_len); any page there still shared with the tree (or another
+        # sharer) gets a private device copy first, so the write can never
+        # leak into another request's history.  Only the divergence
+        # boundary page is ever shared, so this runs at most once per
+        # admission in steady state.
+        r = self.slots[i]
+        while True:
+            blk = self.tables[i].first_shared_block(r.pos, new_len)
+            if blk is None:
+                return True
+            got = self.allocator.alloc(1)
+            if got is None:
+                if not self._relieve_pressure(exclude=i):
+                    self._preempt(i)
+                    return False
+                continue
+            old = self.tables[i].pages[blk]
+            with self.tracer.span("engine.cow", annotate=True,
+                                  page_from=old, page_to=got[0]):
+                self.cache = self._cow_fn(
+                    self.cache, jnp.asarray([old], jnp.int32),
+                    jnp.asarray([got[0]], jnp.int32))
+            self.tables[i].replace(blk, got[0])
+            self._c_cow.inc()
+            self.tracer.instant("COW", rid=r.rid, slot=i, block=blk,
+                                page_from=old, page_to=got[0])
+
+    def _park_prefix(self, i: int, r: ServeRequest):
+        """Insert the finished request's page-aligned written prefix (and
+        its captured a1_sig at the prompt's last position) into the radix
+        tree.  Runs BEFORE ``release()``: ``insert`` takes the tree's own
+        refcount on newly-cached pages, release then drops the table's."""
+        ps = self.ecfg.page_size
+        n_ins = (r.pos // ps) * ps       # only fully-written pages
+        if n_ins <= 0:
+            return
+        a1 = {}
+        q = len(r.prompt) - 1
+        if r.prefix_sig is not None and q < n_ins:
+            a1[q] = r.prefix_sig
+        adopted = self.pcache.insert(
+            np.asarray(r.known()[:n_ins], np.int64),
+            self.tables[i].pages[:n_ins // ps], a1=a1,
+            pinned=r.pin_prefix)
+        if adopted:
+            self.tracer.instant("PREFIX_PARKED", rid=r.rid,
+                                pages=adopted, tokens=n_ins)
 
     def _finish(self, i: int, truncated: bool = False):
         r = self.slots[i]
+        if self.pcache is not None:
+            self._park_prefix(i, r)
         r.done = True
         r.truncated = truncated
         r.finish_tick = self.ticks
@@ -525,8 +680,21 @@ class PagedEngine:
                 r = self.slots[i]
                 r.generated.append(int(nxt_np[i]))
                 if len(r.generated) == 1:
-                    self._h_ttft_ms.record((now - r.submit_time) * 1e3)
-                    self._h_ttft_ticks.record(self.ticks - r.submit_tick)
+                    if self.pcache is not None and r.prefix_sig is None:
+                        # block 1's first-attention signal at position
+                        # len(prompt)-1 (this tick's seg_last row), the
+                        # prefix artifact _park_prefix caches at finish
+                        r.prefix_sig = np.asarray(self.cache["a1_sig"][i])
+                    ttft_ms = (now - r.submit_time) * 1e3
+                    ttft_ticks = self.ticks - r.submit_tick
+                    self._h_ttft_ms.record(ttft_ms)
+                    self._h_ttft_ticks.record(ttft_ticks)
+                    if self.pcache is not None:
+                        hot = r.prefix_hit_tokens > 0
+                        (self._h_ttft_hit_ms if hot
+                         else self._h_ttft_cold_ms).record(ttft_ms)
+                        (self._h_ttft_hit_ticks if hot
+                         else self._h_ttft_cold_ticks).record(ttft_ticks)
                 elif r.last_token_time:
                     self._h_itl_ms.record((now - r.last_token_time) * 1e3)
                 r.last_token_time = now
@@ -645,6 +813,20 @@ class PagedEngine:
             "queue_wait_ticks": pcts(self._h_queue_wait),
             "request_latency_ticks": pcts(self._h_req_ticks),
             "dispatch_ms": pcts(self._h_dispatch_ms),
+            # prefix-sharing cut (None when EngineConfig.prefix_cache off):
+            # radix-tree contents + hit rates, allocator sharing, COW and
+            # a1_sig seeding counts, and TTFT split hot (prefix hit at
+            # admission) vs cold
+            "prefix": None if self.pcache is None else {
+                **self.pcache.stats(),
+                "shared_pages": self.allocator.shared_pages,
+                "cow_copies": self._c_cow.value,
+                "a1_sig_seeded": self._c_sig_seeded.value,
+                "ttft_hit_ms": pcts(self._h_ttft_hit_ms),
+                "ttft_cold_ms": pcts(self._h_ttft_cold_ms),
+                "ttft_hit_ticks": pcts(self._h_ttft_hit_ticks),
+                "ttft_cold_ticks": pcts(self._h_ttft_cold_ticks),
+            },
             "metrics": self.metrics.to_dict(),
         }
 

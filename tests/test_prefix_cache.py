@@ -1,0 +1,554 @@
+"""Radix prefix cache + refcounted COW paged KV: allocator refcount
+semantics (double-free raises, share/free round-trips), radix-tree
+invariants (hypothesis: insert/match round-trips, refcount conservation,
+evictions never drop a referenced page), the device page-copy oracle, and
+engine-level token/a1_sig bit-identity — prefix-hit vs cold prefill across
+all six connection styles, dual-branch, and through preemption — with the
+allocator ending every test fully free."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.serve import sampling as SP
+from repro.serve.paged_cache import BlockTable, PageAllocator
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+
+SIX_STYLES = ("preln", "parallel", "fal", "falplus", "ablation1",
+              "ablation2")
+
+
+# --------------------------------------------------------------------------- #
+# allocator refcounts
+# --------------------------------------------------------------------------- #
+def test_allocator_double_free_raises():
+    a = PageAllocator(num_pages=8, page_size=4)
+    got = a.alloc(2)
+    a.free(got)
+    with pytest.raises(RuntimeError, match="double free"):
+        a.free(got[:1])
+    assert a.in_use == 0
+
+
+def test_allocator_share_free_roundtrip():
+    a = PageAllocator(num_pages=8, page_size=4)
+    got = a.alloc(2)
+    a.share(got)                      # second owner
+    assert a.shared_pages == 2 and a.refcount(got[0]) == 2
+    a.free(got)                       # first owner lets go
+    assert a.in_use == 2              # still held by the second owner
+    assert a.shared_pages == 0
+    a.free(got)                       # last owner -> recycled
+    assert a.in_use == 0
+    with pytest.raises(RuntimeError):
+        a.share(got)                  # free pages can't gain owners
+
+
+def test_block_table_adopt_cow_replace():
+    a = PageAllocator(num_pages=16, page_size=4)
+    owner = a.alloc(2)                # "the tree's" pages
+    t = BlockTable(a, max_blocks=8)
+    a.share(owner)
+    t.adopt(owner)
+    assert t.first_shared_block(0, 8) == 0
+    assert t.first_shared_block(4, 8) == 1
+    new = a.alloc(1)
+    old = t.replace(0, new[0])
+    assert old == owner[0] and a.refcount(old) == 1   # tree's ref survives
+    assert t.first_shared_block(0, 4) is None         # block 0 private now
+    t.release()
+    a.free(owner)                     # tree lets go
+    assert a.in_use == 0
+
+
+# --------------------------------------------------------------------------- #
+# radix tree (deterministic)
+# --------------------------------------------------------------------------- #
+def _mk(page=4, pages=64):
+    a = PageAllocator(num_pages=pages, page_size=page)
+    return a, PrefixCache(a)
+
+
+def _cached_insert(pc, a, toks):
+    """Simulate a finishing request: alloc, insert (tree takes its ref),
+    release the request's own pages."""
+    toks = np.asarray(toks, np.int64)
+    pages = a.alloc(len(toks) // a.page_size)
+    assert pages is not None
+    pc.insert(toks, pages)
+    a.free(pages)
+    return toks
+
+
+def test_radix_match_page_aligned_and_divergence():
+    a, pc = _mk(page=4)
+    _cached_insert(pc, a, list(range(12)))            # 3 pages
+    n, pages, _ = pc.match(np.asarray(list(range(12)) + [99]))
+    assert n == 12 and len(pages) == 3
+    # divergence inside page 2 -> only whole matching pages count
+    n, pages, _ = pc.match(np.asarray(list(range(9)) + [99, 99, 99]))
+    assert n == 8 and len(pages) == 2
+    # divergence inside page 0 -> miss
+    n, pages, _ = pc.match(np.asarray([99] * 12))
+    assert n == 0 and pages == []
+    # sibling insert sharing 2 pages then diverging: splits at the boundary
+    _cached_insert(pc, a, list(range(8)) + [50, 51, 52, 53])
+    n, pages, _ = pc.match(np.asarray(list(range(8)) + [50, 51, 52, 53]))
+    assert n == 12
+    n2, _, _ = pc.match(np.asarray(list(range(12))))
+    assert n2 == 12
+    # 2 shared pages + range(12)'s third + the sibling's divergent page
+    assert a.in_use == pc.n_pages == 4
+    pc.clear()
+    assert a.in_use == 0
+
+
+def test_radix_a1_sig_roundtrip():
+    a, pc = _mk(page=4)
+    toks = np.arange(8)
+    sig = np.arange(16, dtype=np.float32)
+    pages = a.alloc(2)
+    pc.insert(toks, pages, a1={7: sig})
+    a.free(pages)
+    n, _, a1 = pc.match(np.concatenate([toks, [9, 9, 9, 9]]))
+    assert n == 8 and np.array_equal(a1[7], sig)
+    # a partial match short of the position must NOT surface the sig
+    n, _, a1 = pc.match(np.asarray([0, 1, 2, 3, 9, 9, 9, 9]))
+    assert n == 4 and 7 not in a1
+    # edge split keeps the sig on the right side
+    pages = a.alloc(2)
+    pc.insert(np.asarray([0, 1, 2, 3, 20, 21, 22, 23]), pages)
+    a.free(pages)
+    n, _, a1 = pc.match(np.concatenate([toks, [9] * 4]))
+    assert n == 8 and np.array_equal(a1[7], sig)
+    pc.clear()
+    assert a.in_use == 0
+
+
+def test_radix_eviction_lru_and_referenced_pages_survive():
+    a, pc = _mk(page=4, pages=64)
+    t1 = _cached_insert(pc, a, list(range(0, 8)))
+    t2 = _cached_insert(pc, a, list(range(100, 108)))
+    pc.match(t2)                                 # t2 is now most-recent
+    n, held, _ = pc.match(t1)
+    a.share(held)                                # simulate a live admission
+    # t1's pages are referenced -> only t2 (LRU among free) is evictable
+    freed = pc.evict(100)
+    assert freed == 2 and pc.n_pages == 2
+    n, _, _ = pc.match(t1)
+    assert n == 8                                # referenced node survived
+    n, _, _ = pc.match(t2)
+    assert n == 0                                # unreferenced LRU evicted
+    a.free(held)                                 # admission ends
+    assert pc.evict(100) == 2                    # now evictable
+    assert pc.n_pages == 0 and a.in_use == 0
+
+
+def test_radix_eviction_cascades_through_split_chain():
+    a, pc = _mk(page=4)
+    _cached_insert(pc, a, list(range(16)))       # 4-page chain
+    _cached_insert(pc, a, list(range(8)) + [50, 51, 52, 53])  # split at 8
+    assert pc.n_pages == 5
+    assert pc.evict(100) == 5                    # leaves, then exposed parents
+    assert pc.n_pages == 0 and a.in_use == 0
+
+
+def test_radix_max_pages_budget():
+    a = PageAllocator(num_pages=64, page_size=4)
+    pc = PrefixCache(a, max_pages=3)
+    _cached_insert(pc, a, list(range(8)))
+    _cached_insert(pc, a, list(range(100, 112)))  # 3 pages; budget forces LRU
+    assert pc.n_pages <= 3
+    pc.clear()
+    assert a.in_use == 0
+
+
+def test_radix_pinned_nodes_resist_eviction():
+    a, pc = _mk(page=4)
+    toks = np.arange(8)
+    pages = a.alloc(2)
+    pc.insert(toks, pages, pinned=True)
+    a.free(pages)
+    _cached_insert(pc, a, list(range(100, 108)))
+    assert pc.evict(100) == 2                    # only the unpinned node
+    n, _, _ = pc.match(np.concatenate([toks, [9] * 4]))
+    assert n == 8
+    pc.clear()
+    assert a.in_use == 0
+
+
+# --------------------------------------------------------------------------- #
+# radix tree invariants (hypothesis when available, with a seeded
+# random-walk fallback so the properties run in hypothesis-free containers)
+# --------------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _aligned_common(x, y, page):
+    m = 0
+    lim = min(len(x), len(y))
+    while m < lim and x[m] == y[m]:
+        m += 1
+    return (m // page) * page
+
+
+def _check_insert_match_roundtrip(page, seqs, queries):
+    """match == the longest page-aligned common prefix over everything
+    inserted (the tree IS the union of its inserted prefixes), and every
+    page the tree holds is owned exactly once by the tree."""
+    a = PageAllocator(num_pages=256, page_size=page)
+    pc = PrefixCache(a)
+    model = []
+    for s in seqs:
+        _cached_insert(pc, a, s)
+        model.append(s)
+        assert a.in_use == pc.n_pages      # tree is the only owner
+    for q in model + queries:
+        q = np.asarray(q, np.int64)
+        n, pages, _ = pc.match(q)
+        want = max((_aligned_common(np.asarray(s), q, page)
+                    for s in model), default=0)
+        assert n == want
+        assert len(pages) == n // page
+        # an admission holds + releases the matched pages: no leak
+        if len(pages):
+            a.share(pages)
+            a.free(pages)
+    assert a.in_use == pc.n_pages
+    pc.clear()
+    assert a.in_use == 0                   # zero leaked refcounts
+
+
+def _check_eviction_conservation(page, seqs, evict_every):
+    """Random insert/evict interleaving: pages freed by eviction really
+    return to the pool, referenced pages never do, and clear() always
+    drains the tree to a fully-free allocator."""
+    a = PageAllocator(num_pages=256, page_size=page)
+    pc = PrefixCache(a)
+    held = []
+    for k, s in enumerate(seqs):
+        _cached_insert(pc, a, s)
+        if not held:                       # keep one admission live
+            n, pages, _ = pc.match(np.asarray(s, np.int64))
+            if len(pages):
+                a.share(pages)
+                held = pages
+        if evict_every and k % evict_every == 0:
+            pc.evict(1)
+        # every in-use page is either tree-owned or our exclusive hold
+        assert a.in_use == pc.n_pages + sum(
+            1 for pg in held if a.refcount(pg) == 1)
+    if held:                               # held pages must all be alive
+        assert all(a.refcount(pg) >= 1 for pg in held)
+        a.free(held)
+    pc.evict(10 ** 6)
+    assert pc.n_pages == 0
+    pc.clear()
+    assert a.in_use == 0
+
+
+def _random_workload(rng):
+    page = int(rng.choice([2, 4]))
+    seqs = []
+    for _ in range(rng.integers(1, 7)):
+        raw = rng.integers(0, 4, rng.integers(page, 4 * page + 1))
+        al = (len(raw) // page) * page
+        if al:
+            seqs.append(list(raw[:al]))
+    seqs = seqs or [[0] * page]
+    queries = [list(rng.integers(0, 4, rng.integers(0, 5 * page + 1)))
+               for _ in range(4)]
+    return page, seqs, queries
+
+
+def test_radix_insert_match_roundtrip_model_seeded():
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        page, seqs, queries = _random_workload(rng)
+        _check_insert_match_roundtrip(page, seqs, queries)
+
+
+def test_radix_eviction_conservation_seeded():
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        page, seqs, _ = _random_workload(rng)
+        _check_eviction_conservation(page, seqs, int(rng.integers(0, 4)))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _workload(draw):
+        page = draw(st.sampled_from([2, 4]))
+        seqs = draw(st.lists(
+            st.lists(st.integers(0, 3), min_size=page, max_size=4 * page),
+            min_size=1, max_size=6))
+        seqs = [s[:(len(s) // page) * page] for s in seqs]
+        seqs = [s for s in seqs if s]
+        queries = draw(st.lists(
+            st.lists(st.integers(0, 3), min_size=0, max_size=5 * page),
+            min_size=1, max_size=4))
+        return page, seqs, queries
+
+    @given(_workload())
+    @settings(**SETTINGS)
+    def test_radix_insert_match_roundtrip_model(w):
+        page, seqs, queries = w
+        if not seqs:
+            return
+        _check_insert_match_roundtrip(page, seqs, queries)
+
+    @given(_workload(), st.integers(0, 3))
+    @settings(**SETTINGS)
+    def test_radix_eviction_conservation(w, evict_every):
+        page, seqs, _ = w
+        if not seqs:
+            return
+        _check_eviction_conservation(page, seqs, evict_every)
+
+
+# --------------------------------------------------------------------------- #
+# device page copy (COW memcpy)
+# --------------------------------------------------------------------------- #
+def test_copy_pages_oracle_and_kernel_agree():
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(6, 4, 2, 3)).astype(np.float32))
+    src = jnp.asarray([1, 3, 1], jnp.int32)
+    dst = jnp.asarray([4, 2, 5], jnp.int32)
+    want = ref.copy_pages_ref(pool, src, dst)
+    assert np.array_equal(np.asarray(want[4]), np.asarray(pool[1]))
+    assert np.array_equal(np.asarray(want[0]), np.asarray(pool[0]))
+    got = ops.copy_pages(pool, src, dst)                  # cpu fallback
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    got_pl = ops.copy_pages(pool, src, dst, interpret=True)
+    assert np.array_equal(np.asarray(got_pl), np.asarray(want))
+    assert "copy_pages" in ops.dispatch_paths()
+
+
+def test_copy_paged_pages_all_layers():
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    cache = M.init_paged_cache(cfg, 8, 4, 2, "float32")
+    rng = np.random.default_rng(1)
+    cache = jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape).astype(x.dtype)),
+        cache)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), cache)
+    new = jax.jit(M.copy_paged_pages, donate_argnums=(0,))(
+        cache, jnp.asarray([2], jnp.int32), jnp.asarray([5], jnp.int32))
+    for k, pool in new["block0"].items():
+        assert np.array_equal(np.asarray(pool[5]), before["block0"][k][2])
+        assert np.array_equal(np.asarray(pool[3]), before["block0"][k][3])
+    for k, pool in new["blocks"].items():
+        assert np.array_equal(np.asarray(pool[:, 5]),
+                              before["blocks"][k][:, 2])
+        assert np.array_equal(np.asarray(pool[:, 3]),
+                              before["blocks"][k][:, 3])
+    assert np.array_equal(np.asarray(new["a1_sig"]), before["a1_sig"])
+
+
+# --------------------------------------------------------------------------- #
+# engine-level identity: prefix hit vs cold prefill
+# --------------------------------------------------------------------------- #
+def _ecfg(**kw):
+    base = dict(page_size=8, num_pages=48, slots=2, prefill_chunk=8,
+                max_seq=64, cache_dtype="float32", prefix_cache=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _req(rid, prompt, max_new=4):
+    return ServeRequest(rid=rid, prompt=np.asarray(prompt, np.int64),
+                        max_new=max_new,
+                        sampling=SP.SamplingParams(seed=rid))
+
+
+def _sys_prompt(cfg, n=16, seed=3):
+    return np.random.default_rng(seed).integers(1, cfg.vocab, n)
+
+
+def _assert_drained(eng):
+    """Acceptance: the allocator ends every test fully free — the tree's
+    refs are the only ones left, and clear() drops them all."""
+    eng.pcache.clear()
+    assert eng.allocator.in_use == 0
+
+
+@pytest.mark.parametrize("conn", SIX_STYLES)
+def test_prefix_hit_identity_styles(conn):
+    """Hot (radix hit at admission, shared pages + COW) and cold (same
+    engine config, empty tree) runs must emit bit-identical tokens and
+    capture bit-identical a1_sig prefix artifacts, for every connection
+    style.  The hot engine must also skip re-prefill of cached pages:
+    its probe prefill dispatch tokens == the divergence suffix only."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sysp = _sys_prompt(cfg)                        # 16 tokens = 2 full pages
+    tail = np.random.default_rng(5).integers(1, cfg.vocab, 5)
+    prompt = np.concatenate([sysp, tail])
+
+    hot = PagedEngine(cfg, params, _ecfg())
+    donor = _req(1, sysp)
+    hot.submit(donor)
+    hot.run()
+    hot.reset_stats()
+    probe = _req(2, prompt)
+    hot.submit(probe)
+    hot.run()
+    assert probe.prefix_hit_tokens == 16
+    st = hot.stats()
+    assert st["prefix"]["hits"] == 1
+    # hit admissions skip re-prefill of cached pages: the probe's prefill
+    # dispatch tokens are the divergence suffix only (ctx - n_hit = 5,
+    # vs 21 for a cold prefill)
+    assert st["prefill_tokens"] == len(prompt) - 16
+
+    cold = PagedEngine(cfg, params, _ecfg())       # empty tree = cold path
+    probe_c = _req(2, prompt)
+    cold.submit(probe_c)
+    cold.run()
+    assert probe_c.prefix_hit_tokens == 0
+    assert probe_c.generated == probe.generated, conn
+    assert np.array_equal(probe_c.prefix_sig, probe.prefix_sig), conn
+    _assert_drained(hot)
+    _assert_drained(cold)
+
+
+def test_prefix_full_prompt_hit_enters_decode_with_seeded_sig():
+    """A full-prompt hit must enter decode on its FIRST tick (TTFT of one
+    tick, zero prefill tokens) with a1_sig seeded from the cached entry,
+    and still emit exactly the cold engine's tokens."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sysp = _sys_prompt(cfg)                        # page-aligned prompt
+
+    hot = PagedEngine(cfg, params, _ecfg())
+    donor = _req(1, sysp)
+    hot.submit(donor)
+    hot.run()
+    hot.reset_stats()
+    probe = _req(2, sysp, max_new=5)
+    hot.submit(probe)
+    hot.run()
+    st = hot.stats()
+    assert probe.prefix_hit_tokens == len(sysp)
+    assert st["prefill_tokens"] == 0               # no re-prefill at all
+    assert st["prefix"]["a1_sig_seeded"] == 1
+    assert st["prefix"]["cow_copies"] >= 1         # last page privatised
+    assert st["ttft_ticks"]["p50"] == 1            # decode on first tick
+
+    cold = PagedEngine(cfg, params, _ecfg())
+    probe_c = _req(2, sysp, max_new=5)
+    cold.submit(probe_c)
+    cold.run()
+    assert probe_c.generated == probe.generated
+    assert np.array_equal(probe_c.prefix_sig, probe.prefix_sig)
+    _assert_drained(hot)
+    _assert_drained(cold)
+
+
+def test_prefix_cow_leaves_other_sharers_bit_identical():
+    """Concurrent requests sharing a cached prefix: each one's writes land
+    on COW-privatised pages, so every sharer's tokens stay bit-identical
+    to its own lone cold run."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sysp = _sys_prompt(cfg)
+    rng = np.random.default_rng(11)
+    tails = [rng.integers(1, cfg.vocab, 3 + k) for k in range(3)]
+
+    hot = PagedEngine(cfg, params, _ecfg(slots=3))
+    donor = _req(0, sysp)
+    hot.submit(donor)
+    hot.run()
+    probes = [_req(10 + k, np.concatenate([sysp, t]), max_new=6)
+              for k, t in enumerate(tails)]
+    for p in probes:                               # all live at once
+        hot.submit(p)
+    hot.run()
+    assert all(p.prefix_hit_tokens == len(sysp) for p in probes)
+    assert hot.stats()["prefix"]["cow_copies"] == 0    # divergence falls on
+    # fresh pages here (tails start a new block), so sharing alone carries it
+    for p in probes:
+        lone = PagedEngine(cfg, params, _ecfg(slots=1, prefix_cache=False))
+        ref_req = ServeRequest(rid=p.rid, prompt=p.prompt.copy(),
+                               max_new=6,
+                               sampling=SP.SamplingParams(seed=p.rid))
+        lone.submit(ref_req)
+        lone.run()
+        assert ref_req.generated == p.generated, p.rid
+    _assert_drained(hot)
+
+
+def test_prefix_hit_identity_dual_branch_and_preemption():
+    """The hot path composes with dual-branch dispatch and survives
+    preemption: a page-starved prefix-cache engine must still emit exactly
+    the tokens of an unconstrained no-cache engine."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sysp = _sys_prompt(cfg)
+    rng = np.random.default_rng(13)
+    # max_new 10..12: every request's context outgrows 3 pages mid-decode,
+    # so two concurrent lanes want 8 of the tight pool's 6 pages
+    reqs = lambda: [ServeRequest(                  # noqa: E731
+        rid=k, prompt=np.concatenate([sysp, rng.integers(1, cfg.vocab, 2)]),
+        max_new=10 + (k % 3), sampling=SP.SamplingParams(seed=k))
+        for k in range(6)]
+
+    rng = np.random.default_rng(13)
+    ample = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=64, slots=2, prefill_chunk=8, max_seq=64,
+        cache_dtype="float32", dual_branch=True))
+    for r in reqs():
+        ample.submit(r)
+    want = {r.rid: r.generated for r in ample.run()}
+
+    rng = np.random.default_rng(13)
+    # capacity 6: the first (cold) pair of lanes alone needs 3 + 4 pages,
+    # so relief must escalate past prefix eviction to actual preemption;
+    # later pairs fit only because the tree shares the prefix pages
+    tight = PagedEngine(cfg, params, _ecfg(
+        slots=2, num_pages=7, dual_branch=True))
+    for r in reqs():
+        tight.submit(r)
+    done = tight.run()
+    assert len(done) == 6 and not any(r.truncated for r in done)
+    got = {r.rid: r.generated for r in done}
+    assert tight.stats()["preemptions"] > 0        # pressure really bit
+    assert tight.stats()["prefix"]["hits"] > 0     # and the cache really hit
+    assert got == want
+    _assert_drained(tight)
+
+
+def test_prefix_preempted_request_reprefills_from_cached_prefix():
+    """Preemption must not free tree-shared pages, and the re-admission
+    must longest-prefix match again (re-prefill restarts at the cached
+    prefix, not token 0)."""
+    cfg = get_config("llama3.2-3b").reduced().replace(connection="fal")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    sysp = _sys_prompt(cfg)
+    hot = PagedEngine(cfg, params, _ecfg())
+    donor = _req(1, sysp)
+    hot.submit(donor)
+    hot.run()
+    cached = hot.pcache.n_pages
+    assert cached == 2
+    probe = _req(2, np.concatenate(
+        [sysp, np.random.default_rng(4).integers(1, cfg.vocab, 3)]))
+    hot.submit(probe)
+    hot._admit()
+    i = hot.slots.index(probe)
+    hot._preempt(i)                                # forced preemption
+    assert hot.pcache.n_pages == cached            # tree pages survived
+    hot.run()
+    assert probe.prefix_hit_tokens == len(sysp)    # re-admission hit again
+    assert len(probe.generated) == probe.max_new
+    _assert_drained(hot)
