@@ -15,6 +15,7 @@ executed calls.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 
@@ -34,13 +35,37 @@ FALLBACK = "cpu-fallback"
 _DISPATCH_PATHS = {}
 
 
+#: dotted suffix applied to the next recorded sites (``dispatch_site_suffix``)
+_SITE_SUFFIX = ""
+
+
 def _record_dispatch(site: str, fused: bool) -> str:
+    if _SITE_SUFFIX:
+        site = f"{site}.{_SITE_SUFFIX}"
     path = FUSED if fused else FALLBACK
     _DISPATCH_PATHS[site] = path
     _metrics.default_registry().counter(
         f"kernel_dispatch_total.{site}.{path}", unit="traces",
         site="kernels/ops.py").inc()
     return path
+
+
+@contextlib.contextmanager
+def dispatch_site_suffix(suffix: str):
+    """Label dispatches traced inside the context with ``<site>.<suffix>``.
+
+    Dispatch recording happens at TRACE time, so a caller that traces a
+    sub-program under this context (e.g. the speculative-decode DRAFT
+    early-exit forward inside the engine's one jitted tick) gets its kernel
+    paths telemetered separately from the verify path's — same dispatcher,
+    distinct ``dispatch_paths()`` rows (``paged_packed_attention`` vs
+    ``paged_packed_attention.draft``)."""
+    global _SITE_SUFFIX
+    prev, _SITE_SUFFIX = _SITE_SUFFIX, suffix
+    try:
+        yield
+    finally:
+        _SITE_SUFFIX = prev
 
 
 def dispatch_paths() -> dict:
@@ -121,9 +146,15 @@ def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
     (P,page,Hkv,D*) pools addressed through per-SLOT (S,Tb) block tables.
     One dispatch serves lanes at ANY phase with FLOPs scaling in live
     tokens: a prefilling lane contributes up to ``chunk`` tokens, a
-    decoding lane exactly one.  Padding tokens carry tok_pos == -1 and
-    emit exactly 0; callers must only read live rows.  Pallas kernel on
-    TPU; gather-based jnp oracle on CPU (identical numerics)."""
+    decoding lane one — or, under self-speculative decoding, its whole
+    n-token proposal: the VERIFY pass is this same kernel (a decode lane
+    proposing n tokens is just a segment of length n at positions
+    pos..pos+n-1; per-segment causality scores every proposal in the one
+    dispatch, and K/V at later-rejected positions stay causally masked
+    until overwritten when the position is re-fed).  Padding tokens carry
+    tok_pos == -1 and emit exactly 0; callers must only read live rows.
+    Pallas kernel on TPU; gather-based jnp oracle on CPU (identical
+    numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
     _record_dispatch("paged_packed_attention", use_pallas or interpret)
     if use_pallas or interpret:

@@ -107,6 +107,16 @@ def paged_packed_attention_ref(q, k_pages, v_pages, block_tables, tok_slot,
     Padding tokens carry tok_pos == -1: no key is visible and the row
     returns 0 — the identical convention to the Pallas kernel, so the two
     agree on every row; callers must only read live (tok_pos >= 0) rows.
+
+    This is also the speculative-decode VERIFY oracle: a decode lane
+    proposing n tokens packs them as one segment at positions
+    pos..pos+n-1, and the per-token causal mask scores proposal j against
+    exactly the context [0, pos+j] — so every row's attention equals what
+    a sequential one-token-per-tick decode would have computed at that
+    position.  K/V scattered for later-REJECTED proposals sit at
+    positions beyond the lane's rewound ``pos``; ``k_pos <= tok_pos``
+    keeps them invisible until the position is re-fed, at which point the
+    scatter overwrites them before any read.
     """
     T, H, D = q.shape
     Hkv = k_pages.shape[2]

@@ -279,7 +279,8 @@ def _decoder_init_cache(p, cfg, batch, seq, dtype):
 
 def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
                          plan: ExecutionPlan, block_tables=None,
-                         n_valid=None, tok_slot=None, tok_pos=None):
+                         n_valid=None, tok_slot=None, tok_pos=None,
+                         limit=None):
     """Scan the stacked post-block0 layers in dense/moe segments over
     per-layer caches (dense+moe kinds share attention caches; the ffn kind
     switch is static per segment).  Returns (x, new_stacked_cache).
@@ -288,15 +289,26 @@ def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
     window rides into the scan body as a Python int instead of a traced
     vector — attention's static ``window == 0`` checks then hold, keeping
     the paged single-token fast path (kernels.ops.paged_decode_attention)
-    live for the stacked layers, not just block 0."""
+    live for the stacked layers, not just block 0.
+
+    ``limit`` (static) runs only the FIRST ``limit`` stacked layers in
+    depth order across the dense/moe segments — the speculative-decode
+    draft's early exit.  The returned cache then stacks only those
+    ``limit`` layers (None when limit == 0); the caller merges it back
+    over the untouched upper slice."""
     wsched = BL.window_schedule(cfg)[1:]
     static_zero = all(isinstance(w, int) and w == 0 for w in wsched)
     ws_all = jnp.asarray(wsched, jnp.int32)
+    remaining = cfg.n_layers - 1 if limit is None else limit
     i = 0
     seg_caches = []
     for name, kind in (("blocks_dense", "dense"), ("blocks_moe", "moe")):
-        if name in p and p[name] is not None:
+        if remaining > 0 and name in p and p[name] is not None:
             n = jax.tree.leaves(p[name])[0].shape[0]
+            n = min(n, remaining)
+            remaining -= n
+            pseg = p[name] if limit is None else \
+                jax.tree.map(lambda a: a[:n], p[name])
             ws = None if static_zero else jax.lax.slice_in_dim(ws_all, i, i + n)
             cache_seg = jax.tree.map(
                 lambda a: jax.lax.slice_in_dim(a, i, i + n), blocks_cache)
@@ -312,11 +324,13 @@ def _decoder_layer_stack(p, cfg, x, a1_sig, pos, blocks_cache,
                     n_valid=n_valid, tok_slot=tok_slot, tok_pos=tok_pos)
                 return h, c_new
 
-            xs = (p[name], cache_seg) if static_zero else \
-                (p[name], ws, cache_seg)
+            xs = (pseg, cache_seg) if static_zero else \
+                (pseg, ws, cache_seg)
             x, cseg = jax.lax.scan(body, x, xs)
             seg_caches.append(cseg)
             i += n
+    if not seg_caches:                         # limit == 0: block 0 only
+        return x, None
     return x, jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *seg_caches)
 
 
@@ -505,6 +519,57 @@ def _decoder_paged_packed(p, cfg, batch, cache, plan: ExecutionPlan,
         return x, new_caches
     logits = _logits(p, cfg, x)
     return logits, new_caches
+
+
+def _decoder_paged_packed_draft(p, cfg, batch, cache, plan: ExecutionPlan,
+                                draft_blocks):
+    """Early-exit packed forward for the self-speculative DRAFT path: run
+    block 0 plus the first ``draft_blocks - 1`` stacked layers (depth order
+    across the dense/moe segments) over the packed batch and return the
+    truncated-stack hidden states — FAL's defining property (every later
+    MLP reads block 0's first-attention signal, not its neighbour's
+    attention) makes this shallow prefix unusually self-contained, so
+    ``lm_head`` over it is the engine's draft model at ~draft_blocks /
+    n_layers of the FLOPs and zero extra weights.
+
+    Returns (hidden (1, T, D), new_cache).  K/V is scattered for the draft
+    layers only — the verify pass recomputes layers < draft_blocks on the
+    same tokens and overwrites those rows with identical values (the
+    activations agree layer-for-layer), and is the first writer for every
+    deeper layer.  ``cache['a1_sig']`` is NOT refreshed here: the per-slot
+    export must track the lane's last ACCEPTED position, which only the
+    verify pass knows.  Kernel dispatches traced inside carry a
+    ``.draft`` site suffix so runtime telemetry separates the draft's
+    attention path from the verify's."""
+    from repro.kernels import ops as _ops
+    tokens, bt = batch["tokens"], batch["block_tables"]
+    tok_slot, tok_pos = batch["tok_slot"], batch["tok_pos"]
+    positions = jnp.maximum(tok_pos, 0)[None]                   # (1, T)
+    with _ops.dispatch_site_suffix("draft"):
+        x = _embed_tokens(p, cfg, tokens[None], positions)
+        x = constrain_batch(x, plan)
+        wsched = BL.window_schedule(cfg)
+        x, a1_raw, _, c0 = BL.block_apply(
+            p["block0"], cfg, x, None, positions, wsched[0],
+            kind=_layer_kind(cfg, 0), is_block0=True, plan=plan,
+            cache=cache["block0"], block_tables=bt,
+            tok_slot=tok_slot, tok_pos=tok_pos)
+        a1_sig = fal.first_attention_signal(cfg, p["block0"], a1_raw)
+        new_caches = {"block0": c0, "a1_sig": cache["a1_sig"]}
+        x, low = _decoder_layer_stack(p, cfg, x, a1_sig, None,
+                                      cache["blocks"], plan,
+                                      block_tables=bt, tok_slot=tok_slot,
+                                      tok_pos=tok_pos,
+                                      limit=draft_blocks - 1)
+    if low is None:
+        new_caches["blocks"] = cache["blocks"]
+    else:
+        upper = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, draft_blocks - 1, a.shape[0]),
+            cache["blocks"])
+        new_caches["blocks"] = jax.tree.map(
+            lambda lo, hi: jnp.concatenate([lo, hi], 0), low, upper)
+    return x, new_caches
 
 
 def _mamba_block_init(key, cfg):
@@ -924,6 +989,50 @@ def lm_head(params, cfg, x):
     (B, S, V).  The tail ``paged_decode_step(want='hidden')`` callers run
     on their gathered lanes."""
     return _logits(params, cfg, x)
+
+
+def paged_spec_draft(params, cfg, batch, cache, plan=None, *, draft_blocks=1):
+    """Self-speculative DRAFT forward on the token-packed layout: embed ->
+    block 0 -> the first ``draft_blocks - 1`` stacked layers, returning
+    (hidden (1, T, D), new_cache) — the early-exit stack the serving
+    engine's draft loop runs ``lm_head`` over to propose tokens
+    (``EngineConfig.draft_blocks``).  Requires 1 <= draft_blocks <
+    cfg.n_layers; the batch contract is ``_decoder_paged_packed``'s
+    (tokens/tok_slot/tok_pos/block_tables; no seg_last — the caller reads
+    the rows it planted).  Draft-layer K/V is scattered; deeper layers and
+    the per-slot ``a1_sig`` export are untouched (the verify pass owns
+    them)."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"speculative draft: decoder family only, got {cfg.family}")
+    if not 1 <= draft_blocks < cfg.n_layers:
+        raise ValueError(
+            f"draft_blocks={draft_blocks} must satisfy 1 <= draft_blocks "
+            f"< n_layers={cfg.n_layers} (== n_layers would be the full "
+            f"model, not a draft)")
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED).validate(cfg)
+    return _decoder_paged_packed_draft(params, cfg, batch, cache, plan,
+                                       draft_blocks)
+
+
+def lm_head_segment_tail(params, cfg, hidden, seg_last, n):
+    """Per-segment multi-logit gather + head for speculative VERIFY:
+    gather each segment's LAST ``n`` packed rows from ``hidden``
+    (1, T, D) — rows ``seg_last[s] - (n-1) .. seg_last[s]`` — and run
+    ``lm_head`` on the (S, n, D) gather, paying S*n/T of the full head.
+
+    Returns (logits (S, n, V), rows (S, n) int32).  Lanes sitting the
+    tick out (``seg_last == -1``) and gathered indices that would
+    underrun row 0 are clamped to row 0 but ZEROED before the head, so
+    NaN/garbage in scratch rows can never reach a sampled token —
+    callers mask which columns are live (a non-speculative segment's
+    only live column is the last)."""
+    off = jnp.arange(n, dtype=jnp.int32) - (n - 1)               # (n,)
+    rows = seg_last[:, None] + off[None, :]                      # (S, n)
+    valid = (seg_last >= 0)[:, None] & (rows >= 0)
+    h = hidden[0, jnp.maximum(rows, 0)]                          # (S, n, D)
+    h = jnp.where(valid[:, :, None], h, 0.0)
+    return _logits(params, cfg, h), rows
 
 
 def copy_paged_pages(cache, src, dst):

@@ -8,7 +8,9 @@ Three pieces, all off-by-default and cheap when off:
   Perfetto.  ``PagedEngine`` emits per-tick spans and per-request
   lifecycle events (QUEUED -> ADMITTED [-> PREFIX_HIT] -> PREFILL ->
   DECODE -> PREEMPTED/requeued -> FINISHED, plus COW / PREFIX_PARKED /
-  PREFIX_EVICT instants from the prefix-sharing subsystem); engine
+  PREFIX_EVICT instants from the prefix-sharing subsystem and
+  SPEC_ROLLBACK instants when speculative-decode rejection rewinds page
+  growth); engine
   dispatches are additionally
   wrapped in ``jax.profiler.TraceAnnotation`` so XLA device profiles line
   up with the engine spans.
@@ -54,6 +56,9 @@ engine_ttft_hit_ms                      histogram  ms       serve/scheduler.py  
 engine_ttft_cold_ms                     histogram  ms       serve/scheduler.py  PagedEngine._run_packed
 engine_ttft_hit_ticks                   histogram  ticks    serve/scheduler.py  PagedEngine._run_packed
 engine_ttft_cold_ticks                  histogram  ticks    serve/scheduler.py  PagedEngine._run_packed
+engine_spec_accepted_total              counter    tokens   serve/scheduler.py  PagedEngine._consume_spec_lane
+engine_spec_rejected_total              counter    tokens   serve/scheduler.py  PagedEngine._consume_spec_lane
+engine_spec_accepted_len                histogram  tokens   serve/scheduler.py  PagedEngine._consume_spec_lane
 pages_in_use                            gauge      pages    serve/paged_cache.py PageAllocator
 pages_shared                            gauge      pages    serve/paged_cache.py PageAllocator
 pages_alloc_total                       counter    pages    serve/paged_cache.py PageAllocator.alloc

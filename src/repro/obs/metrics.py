@@ -95,9 +95,21 @@ class Histogram:
         return self.total / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
-        """p in [0, 100]; 0.0 when empty."""
+        """p in [0, 100]; 0.0 when empty.
+
+        The extreme ranks are exact: p == 0 returns the recorded min and
+        p == 100 the recorded max (count/min/max are tracked exactly, so
+        neither needs a bucket walk — and a bucket walk would be wrong:
+        rank 0 trivially satisfies ``seen >= rank`` at the FIRST bucket,
+        which is the min's bucket only by accident).  Interior ranks
+        interpolate at the winning bucket's midpoint, clamped to the
+        extrema."""
         if not self.count:
             return 0.0
+        if p <= 0.0:
+            return self.min
+        if p >= 100.0:
+            return self.max
         rank = p / 100.0 * self.count
         seen = 0
         for idx in sorted(self._buckets):
@@ -105,7 +117,13 @@ class Histogram:
             seen += n
             if seen >= rank:
                 if idx == -(2 ** 31):
-                    return min(self.min, 0.0)
+                    # non-positive samples share one underflow bucket (no
+                    # log midpoint exists): the first sample there is the
+                    # recorded min; deeper ranks clamp to the bucket's
+                    # upper edge (0) within the recorded extrema
+                    if rank <= 1.0:
+                        return self.min
+                    return min(max(0.0, self.min), self.max)
                 lo, hi = _LOG_BASE ** (idx - 1), _LOG_BASE ** idx
                 # clamp the edge buckets to the exact extrema
                 return min(max((lo + hi) / 2.0, self.min), self.max)

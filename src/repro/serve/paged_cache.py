@@ -222,6 +222,20 @@ class BlockTable:
         self.alloc.free([old])
         return old
 
+    def shrink(self, seq_len: int) -> int:
+        """Drop trailing pages beyond what ``seq_len`` tokens need — the
+        speculative-decode rollback: a tick that grew the table for n
+        proposed tokens but accepted fewer rewinds the growth here.  Only
+        THIS table's references are dropped (free decrements refcounts),
+        so pages still owned by the prefix cache or another sharer
+        survive untouched.  Returns the number of references dropped."""
+        keep = pages_needed(seq_len, self.alloc.page_size)
+        tail = self.pages[keep:]
+        if tail:
+            self.pages = self.pages[:keep]
+            self.alloc.free(tail)
+        return len(tail)
+
     def release(self) -> None:
         if self.pages:
             self.alloc.free(self.pages)

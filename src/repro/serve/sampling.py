@@ -8,6 +8,14 @@ derived as ``fold_in(PRNGKey(seed), position)`` — a pure function of
 (request seed, token position) — which makes generation replayable: a
 preempted request that re-prefills its context and resumes sampling at the
 same positions draws the same tokens.
+
+Two interchangeable programs sample a lane: the reference ``sample_one``
+(two full-vocab stable sorts — handles any (top_k, top_p) combination) and
+``fast_sampler`` (one ``lax.top_k`` over ``TOPK_FAST_CAP`` candidates,
+bit-exact whenever ``fast_eligible`` holds).  The engine picks the variant
+host-side per tick, which matters most for speculative ticks where the
+sampler runs once per draft proposal plus once per (lane, proposal) verify
+cell.
 """
 from __future__ import annotations
 
@@ -30,23 +38,40 @@ class SamplingParams:
 
 
 def _mask_top_k(logits, k):
-    """Keep the k highest logits (k <= 0 disables)."""
+    """Keep EXACTLY the k highest logits (k <= 0 disables).
+
+    Exact sorted-prefix semantics: a token survives iff its rank in the
+    stable descending sort is < k, so threshold ties keep only enough of
+    the tied tokens to total k (ties break toward the lower vocab index —
+    the stable-sort order).  A ``logits >= thr`` comparison would instead
+    keep EVERY token tied at the threshold, inflating the candidate set
+    past k on tied/degenerate distributions."""
     V = logits.shape[-1]
-    srt = jnp.sort(logits)[::-1]
-    kk = jnp.where(k <= 0, V, k)
-    thr = srt[jnp.clip(kk - 1, 0, V - 1)]
-    return jnp.where(logits >= thr, logits, -jnp.inf)
+    kk = jnp.where(k <= 0, V, jnp.clip(k, 1, V))
+    order = jnp.argsort(-logits)               # stable: ties by vocab index
+    rank = jnp.zeros((V,), jnp.int32).at[order].set(jnp.arange(V, dtype=jnp.int32))
+    return jnp.where(rank < kk, logits, -jnp.inf)
+
 
 def _mask_top_p(logits, p):
-    """Nucleus: keep the smallest prefix of the sorted distribution with
-    mass >= p (p >= 1 disables)."""
+    """Nucleus: keep the SMALLEST prefix of the stable descending sort
+    whose mass reaches p (p >= 1 disables).
+
+    Exact sorted-prefix semantics: sorted token j survives iff the mass
+    strictly before it is < p (the prefix stops at the first token whose
+    inclusive mass reaches p; the top token always survives).  A
+    threshold-value comparison (``probs >= thr``) would instead keep every
+    token tied with the boundary probability, inflating the kept mass past
+    p on tied distributions."""
+    V = logits.shape[-1]
     probs = jax.nn.softmax(logits)
-    sp = jnp.sort(probs)[::-1]
+    order = jnp.argsort(-probs)                # stable: ties by vocab index
+    sp = probs[order]
     cs = jnp.cumsum(sp)
-    idx = jnp.argmax(cs >= p)            # first sorted index reaching mass p
-    thr = sp[idx]
-    keep = (probs >= thr) | (p >= 1.0)
-    return jnp.where(keep, logits, -jnp.inf)
+    keep_sorted = (cs - sp) < p                # exclusive prefix mass < p
+    keep_sorted = keep_sorted.at[0].set(True)  # never empty (p == 0 -> top-1)
+    keep = jnp.zeros((V,), bool).at[order].set(keep_sorted)
+    return jnp.where(keep | (p >= 1.0), logits, -jnp.inf)
 
 
 def _sample_one(logits, temp, top_k, top_p, seed, pos):
@@ -68,3 +93,58 @@ sample_one = _sample_one
 # sample_tokens(logits (B,V), temps (B,), top_ks (B,), top_ps (B,),
 #               seeds (B,), positions (B,)) -> (B,) int32
 sample_tokens = jax.jit(jax.vmap(_sample_one))
+
+
+# --------------------------------------------------------------------------- #
+# fast path: partial top-k selection instead of two full-vocab sorts
+# --------------------------------------------------------------------------- #
+# largest per-lane top_k the fast sampler handles exactly; lanes above it
+# (or with top_k disabled while top_p is active) need the full-vocab sort
+TOPK_FAST_CAP = 64
+
+
+def fast_eligible(sp: SamplingParams, vocab, k_cap=TOPK_FAST_CAP):
+    """True when ``fast_sampler`` reproduces the reference ``sample_one``
+    exactly for this request: greedy lanes ignore the masks entirely, and
+    a lane with ``1 <= top_k <= k_cap`` has BOTH masks contained in the
+    top-k candidate set (top-p prunes within the top-k survivors)."""
+    return sp.temperature <= 0.0 or 0 < sp.top_k <= min(k_cap, vocab)
+
+
+def fast_sampler(vocab, k_cap=TOPK_FAST_CAP):
+    """Build a ``sample_one`` drop-in that replaces the two full-vocab
+    argsorts with one ``lax.top_k`` over ``k_cap`` candidates — ~20x
+    cheaper per lane on the CPU fallback, which matters because the
+    speculative tick samples (n-1) draft proposals plus an (S, n) target
+    grid every dispatch.
+
+    Bit-exact with the reference for every lane satisfying
+    ``fast_eligible``: ``lax.top_k`` breaks ties toward the lower vocab
+    index — the same order as the reference's stable descending argsort —
+    so the kept set matches ``_mask_top_k``/``_mask_top_p`` exactly, and
+    the gumbel noise is drawn over the FULL vocab with the same
+    ``fold_in(seed, position)`` key and gathered onto the candidates, so
+    the sampled token equals the reference's argmax over the masked
+    vocab.  The engine checks eligibility host-side per tick and falls
+    back to the reference program otherwise (still one dispatch)."""
+    cap = int(min(k_cap, vocab))
+
+    def sample(logits, temp, top_k, top_p, seed, pos):
+        logits = logits.astype(jnp.float32)
+        greedy = jnp.argmax(logits, -1)
+        kk = jnp.clip(top_k, 1, cap)
+        vals, idx = jax.lax.top_k(logits, cap)   # ties: lower index first
+        in_k = jnp.arange(cap) < kk
+        sv = jnp.where(in_k, vals, -jnp.inf)
+        sp = jax.nn.softmax(sv)                  # mass over the survivors
+        cs = jnp.cumsum(sp)
+        keep = in_k & (((cs - sp) < top_p) | (top_p >= 1.0))
+        keep = keep.at[0].set(True)              # never empty (p == 0)
+        lg = jnp.where(keep, sv, -jnp.inf) / jnp.maximum(temp, 1e-6)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        g = -jnp.log(-jnp.log(jax.random.uniform(
+            key, logits.shape, minval=1e-20, maxval=1.0)))
+        sampled = idx[jnp.argmax(lg + g[idx], -1)]
+        return jnp.where(temp <= 0.0, greedy, sampled).astype(jnp.int32)
+
+    return sample

@@ -17,10 +17,28 @@ engine with:
     attention; the LM head runs only on each segment's last token).
     Decode lanes are packed FIRST and are therefore never head-of-line
     blocked behind a prefill burst; ``EngineConfig.max_prefill_tokens`` is
-    the fairness knob that additionally caps prefill tokens per tick.
+    the fairness knob that additionally caps prefill tokens per tick, and
+    prefill grants walk the pending lanes in rotating round-robin order
+    (start index = tick counter) so no lane starves under budget pressure.
     ``pack_tokens`` is the pure host-side packer (property-tested);
+  * SELF-SPECULATIVE decoding (``EngineConfig.spec_tokens``) — FAL's
+    signal redirection makes the first ``draft_blocks`` blocks a built-in
+    draft model: each eligible decode lane proposes n-1 tokens via the
+    early-exit forward and packs the whole n-token proposal as ONE
+    segment, verified by the same full-depth packed dispatch (a segment
+    of length n at positions pos..pos+n-1 — per-segment causality scores
+    every proposal exactly as sequential decode would).  Draft, verify
+    and sampling live inside the engine's ONE jitted program per tick;
+    the host accepts the longest matching proposal prefix plus the bonus
+    target and rewinds rejected page growth (``BlockTable.shrink`` —
+    refcount-safe, shared prefix pages survive).  Exact-match acceptance
+    keeps greedy AND seeded token streams bit-identical to
+    non-speculative decode;
   * per-request seeded sampling (serve/sampling.py) fused into the tick's
-    dispatch;
+    dispatch — the engine picks between the reference sampler and the
+    bit-exact partial-top-k fast sampler host-side per tick
+    (``sampling.fast_eligible``), keeping speculative ticks from paying
+    two full-vocab sorts per (lane, proposal) sample;
   * preemption by page pressure — when a slot can't grow its block table,
     the youngest other active request is evicted: its pages are released and
     it is requeued (front).  On re-admission it re-prefills prompt +
@@ -85,7 +103,7 @@ _SITE = "serve/scheduler.py"
 # --------------------------------------------------------------------------- #
 # the engine's ONE jitted program
 # --------------------------------------------------------------------------- #
-def make_packed_step(cfg, plan=None):
+def make_packed_step(cfg, plan=None, *, sampler=None):
     """Jitted packed tick: (params, cache, tokens (T,), tok_slot (T,),
     tok_pos (T,), block_tables (S,Tb), seg_last (S,), temps, top_ks,
     top_ps, seeds, sample_pos) -> (seg_logits (S,V), next_tokens (S,),
@@ -113,6 +131,7 @@ def make_packed_step(cfg, plan=None):
     """
     plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
     plan.validate(cfg)
+    samp = sampler if sampler is not None else SP.sample_one
 
     def step(params, cache, tokens, tok_slot, tok_pos, block_tables,
              seg_last, temps, top_ks, top_ps, seeds, sample_pos):
@@ -120,11 +139,116 @@ def make_packed_step(cfg, plan=None):
                  "block_tables": block_tables, "seg_last": seg_last}
         hidden, new_cache = M.paged_decode_step(params, cfg, batch, cache,
                                                 plan, want="hidden")
-        h_seg = hidden[0, jnp.maximum(seg_last, 0)]              # (S, D)
+        # lanes sitting the tick out carry seg_last == -1: zero their
+        # gathered row BEFORE the head (a clamped row-0 gather would run
+        # the LM head + sampler on another lane's scratch state — NaN or
+        # garbage there must never reach a sampled token) and return the
+        # -1 sentinel instead of a sampled id
+        active = seg_last >= 0
+        h_seg = jnp.where(active[:, None],
+                          hidden[0, jnp.maximum(seg_last, 0)], 0.0)  # (S, D)
         logits = M.lm_head(params, cfg, h_seg[:, None])[:, 0]    # (S, V)
-        nxt = jax.vmap(SP.sample_one)(logits, temps, top_ks, top_ps,
-                                      seeds, sample_pos)
+        nxt = jax.vmap(samp)(logits, temps, top_ks, top_ps,
+                             seeds, sample_pos)
+        nxt = jnp.where(active, nxt, jnp.int32(-1))
         return logits, nxt, new_cache
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def make_spec_step(cfg, plan=None, *, spec_tokens, draft_blocks,
+                   sampler=None):
+    """Jitted SELF-SPECULATIVE packed tick — still ONE dispatch per tick:
+    (params, cache, tokens (T,), tok_slot (T,), tok_pos (T,),
+    block_tables (S,Tb), seg_last (S,), spec_mask (S,), temps, top_ks,
+    top_ps, seeds) -> (targets (S,n), fed (S,n), new_cache).
+
+    Lanes with ``spec_mask`` set are decode lanes whose packed segment
+    spans ``n == spec_tokens`` rows: the lane's pending token followed by
+    n-1 device-filled placeholder rows at positions pos+1..pos+n-1.  The
+    program runs, inside the SAME jit trace (so the engine's host-side
+    dispatch counter still increments once per tick):
+
+      1. DRAFT — n-1 unrolled early-exit iterations.  Iteration j embeds
+         each spec lane's row ``seg_start + j`` as a flat (S,) packed
+         batch (non-spec lanes ride as padding, tok_pos == -1), runs
+         block 0 plus the first ``draft_blocks - 1`` stacked layers
+         (``model.paged_spec_draft``; FAL's signal redirection makes the
+         shallow prefix its own draft model), samples a proposal with the
+         SAME replayable ``fold_in(seed, position)`` key the verify pass
+         will use — identical keys + near-identical logits is what makes
+         seeded-sampling proposals match their targets — and plants it in
+         row ``seg_start + j + 1`` of the token buffer.
+      2. VERIFY — the full-depth packed forward over the whole buffer in
+         the tick's one ``paged_packed_attention``-backed program: a lane
+         proposing n tokens is just a segment of length n, so per-segment
+         causal masking scores every proposal against exactly the context
+         a sequential decode would have seen.  The LM head runs on each
+         segment's last n gathered rows (``model.lm_head_segment_tail``),
+         and targets are sampled per position — ``targets[s, j]`` is the
+         model's true next token after row ``rows[s, j]``.
+
+    The host accepts the longest prefix of proposals that match their
+    targets (exact-match speculative sampling: greedy AND seeded streams
+    stay bit-identical to non-speculative decode) plus the bonus target
+    after it, then rolls rejected growth back (``BlockTable.shrink``).
+    Draft-layer K/V written for rejected rows is overwritten by verify /
+    later re-feeds and stays causally invisible meanwhile.  Non-spec lanes
+    (prefill segments, decode lanes near ``max_seq``, lanes awaiting
+    their first token) consume ``targets[s, n-1]`` — the plain packed-tick
+    sample.  Dead columns are zeroed before the head and return the -1
+    sentinel (same NaN-containment contract as ``make_packed_step``).
+
+    Note ``cache['a1_sig']`` is refreshed by the verify pass from each
+    segment's LAST row — for a spec lane that position may be rejected.
+    No packed-engine consumer reads it for spec lanes: the dual-branch
+    packed path uses the tick's fresh per-token signal, and the
+    prefix-cache artifact is captured on a lane's FIRST sampled token,
+    which the engine always serves non-speculatively.
+    """
+    n = int(spec_tokens)
+    assert n >= 2, "spec_tokens >= 2 (1 proposal minimum)"
+    plan = ExecutionPlan.resolve(plan).with_phase(Phase.PAGED)
+    plan.validate(cfg)
+    samp = sampler if sampler is not None else SP.sample_one
+
+    def step(params, cache, tokens, tok_slot, tok_pos, block_tables,
+             seg_last, spec_mask, temps, top_ks, top_ps, seeds):
+        T = tokens.shape[0]
+        S = seg_last.shape[0]
+        seg_start = seg_last - (n - 1)
+        lane = jnp.arange(S, dtype=jnp.int32)
+        toks = tokens
+        for j in range(n - 1):                       # ---- draft loop ----
+            row = jnp.where(spec_mask, jnp.maximum(seg_start + j, 0), 0)
+            dpos = jnp.where(spec_mask, tok_pos[row], -1)
+            dbatch = {"tokens": jnp.where(spec_mask, toks[row], 0),
+                      "tok_slot": lane, "tok_pos": dpos,
+                      "block_tables": block_tables}
+            dh, cache = M.paged_spec_draft(params, cfg, dbatch, cache,
+                                           plan, draft_blocks=draft_blocks)
+            h = jnp.where(spec_mask[:, None], dh[0], 0.0)        # (S, D)
+            dlogits = M.lm_head(params, cfg, h[:, None])[:, 0]   # (S, V)
+            dnext = jax.vmap(samp)(dlogits, temps, top_ks,
+                                   top_ps, seeds, dpos + 1)
+            wrow = jnp.where(spec_mask, seg_start + j + 1, T)
+            toks = toks.at[wrow].set(dnext, mode="drop")
+        # ---- verify: the tick's ONE full-depth packed dispatch --------
+        batch = {"tokens": toks, "tok_slot": tok_slot, "tok_pos": tok_pos,
+                 "block_tables": block_tables, "seg_last": seg_last}
+        hidden, new_cache = M.paged_decode_step(params, cfg, batch, cache,
+                                                plan, want="hidden")
+        logits, rows = M.lm_head_segment_tail(params, cfg, hidden,
+                                              seg_last, n)      # (S, n, V)
+        col = jnp.arange(n, dtype=jnp.int32)[None, :]
+        live = ((seg_last >= 0)[:, None] & (rows >= 0)
+                & (spec_mask[:, None] | (col == n - 1)))
+        rpos = tok_pos[jnp.maximum(rows, 0)]                     # (S, n)
+        one = jax.vmap(samp, in_axes=(0, None, None, None, None, 0))
+        tgt = jax.vmap(one)(logits, temps, top_ks, top_ps, seeds, rpos + 1)
+        tgt = jnp.where(live, tgt, jnp.int32(-1))
+        fed = jnp.where(live, toks[jnp.maximum(rows, 0)], jnp.int32(-1))
+        return tgt, fed, new_cache
 
     return jax.jit(step, donate_argnums=(1,))
 
@@ -146,23 +270,33 @@ class PackedTick:
 
 
 def pack_tokens(token_lists, positions, decode_flags, budget,
-                prefill_cap=0) -> PackedTick:
+                prefill_cap=0, rotate=0) -> PackedTick:
     """Pure host-side token packer: per-slot lists of pending context
     tokens (empty for idle slots) at per-slot ``positions`` -> a
     ``PackedTick`` over a flat ``(budget,)`` buffer.
 
     Packing order and fairness:
-      * decode lanes (``decode_flags[i]``, exactly one pending token) are
-        packed FIRST, in slot order — one token each, never displaced by a
+      * decode lanes (``decode_flags[i]``) are packed FIRST, in slot order,
+        and take their WHOLE pending list — one token in plain decode, or
+        the lane's n-token speculative proposal — never displaced by a
         prefill burst;
       * prefill lanes then split the remaining budget (optionally capped at
-        ``prefill_cap`` tokens total, 0 = uncapped): a first round grants
-        one token per lane in slot order so every lane stays live, a second
-        round fills lanes greedily in slot order.
+        ``prefill_cap`` tokens total, 0 = uncapped) in TRUE round-robin
+        order: both grant rounds walk the pending prefill lanes starting at
+        slot ``rotate % slots`` (the engine passes its tick counter), so
+        under sustained budget pressure every pending lane leads the grant
+        order at least once every ``slots`` ticks — even as lanes join and
+        leave the pending set.  A first round grants one token per lane so
+        every reached lane stays live; a second round fills lanes greedily
+        in the same rotated order.  (A fixed slot-0 start — the
+        pre-rotation behavior — starves high-numbered lanes for as long as
+        the pressure lasts.)
 
     Each packed slot's tokens are contiguous with monotone positions
-    ``positions[i] + arange(n_taken[i])``.  The caller guarantees
-    ``budget >= live decode lanes`` (the engine enforces budget >= slots).
+    ``positions[i] + arange(n_taken[i])``; the buffer lays segments out in
+    slot order (decode lanes first) regardless of ``rotate``.  The caller
+    guarantees the budget covers every decode lane's pending list (the
+    engine enforces budget >= slots * spec segment length).
     """
     S = len(token_lists)
     take = np.zeros((S,), np.int32)
@@ -170,9 +304,17 @@ def pack_tokens(token_lists, positions, decode_flags, budget,
                   if len(token_lists[i]) and decode_flags[i]]
     prefill_ids = [i for i in range(S)
                    if len(token_lists[i]) and not decode_flags[i]]
-    left = budget - len(decode_ids)
+    for i in decode_ids:
+        take[i] = len(token_lists[i])
+    left = budget - int(take.sum())
     assert left >= 0, "token budget below live decode lanes"
-    take[decode_ids] = 1
+    if prefill_ids:
+        # rotate over SLOT indices (not list positions): the start slot
+        # cycles 0..S-1, so every pending lane is first in the grant order
+        # at least once every S ticks even as lanes join/leave the set
+        start = rotate % S
+        prefill_ids = ([i for i in prefill_ids if i >= start]
+                       + [i for i in prefill_ids if i < start])
     pleft = min(left, prefill_cap) if prefill_cap else left
     for i in prefill_ids:                       # round 1: liveness
         if pleft <= 0:
@@ -190,7 +332,7 @@ def pack_tokens(token_lists, positions, decode_flags, budget,
     tok_pos = np.full((budget,), -1, np.int32)
     seg_last = np.full((S,), -1, np.int32)
     off = 0
-    for i in decode_ids + prefill_ids:
+    for i in decode_ids + sorted(prefill_ids):
         n = int(take[i])
         if n == 0:
             continue
@@ -266,6 +408,15 @@ class EngineConfig:
     # (0 = bounded only by the pool; LRU eviction under pressure either way)
     prefix_cache: bool = False
     max_cached_prefix_pages: int = 0
+    # self-speculative decoding (the FAL early-exit draft): spec_tokens is
+    # the tokens each decode lane PROPOSES per tick (its packed segment
+    # length; 0 = off, >= 2 on), draft_blocks how many leading blocks
+    # (block 0 included) the draft path runs before its LM head.  The
+    # draft, the verify and the fused sampling all live in the engine's
+    # ONE jitted dispatch per tick; exact-match acceptance keeps greedy
+    # and seeded token streams bit-identical to non-speculative decode
+    spec_tokens: int = 0
+    draft_blocks: int = 2
 
 
 class PagedEngine:
@@ -290,12 +441,26 @@ class PagedEngine:
                 "need image_embeds plumbed through ServeRequest")
         assert engine_cfg.admission in ("prompt", "full"), engine_cfg.admission
         self.cfg, self.params, self.ecfg = cfg, params, engine_cfg
+        self.spec = int(engine_cfg.spec_tokens)
+        if self.spec:
+            if self.spec < 2:
+                raise ValueError(
+                    f"spec_tokens={self.spec}: needs >= 2 (the lane's "
+                    f"pending token + at least one proposal), or 0 = off")
+            if not 1 <= engine_cfg.draft_blocks < cfg.n_layers:
+                raise ValueError(
+                    f"draft_blocks={engine_cfg.draft_blocks} must satisfy "
+                    f"1 <= draft_blocks < n_layers={cfg.n_layers}")
+        # every decode lane needs spec_tokens rows under speculation; the
+        # auto budget generalises slots + chunk - 1 accordingly
+        seg = max(1, self.spec)
         self.budget = engine_cfg.token_budget or (
-            engine_cfg.slots + engine_cfg.prefill_chunk - 1)
-        if self.budget < engine_cfg.slots:
+            engine_cfg.slots * seg + engine_cfg.prefill_chunk - 1)
+        if self.budget < engine_cfg.slots * seg:
             raise ValueError(
                 f"token_budget={self.budget} cannot keep all "
-                f"{engine_cfg.slots} slots live (need >= slots)")
+                f"{engine_cfg.slots} slots live (need >= slots * "
+                f"{seg} packed rows per decode lane)")
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None else NULL_TRACER
         # the engine stores a typed plan, not a context dict; every jitted
@@ -309,7 +474,11 @@ class PagedEngine:
         self.cache = M.init_paged_cache(
             cfg, engine_cfg.num_pages, engine_cfg.page_size,
             engine_cfg.slots, engine_cfg.cache_dtype)
-        self.step_fn = make_packed_step(cfg, self.plan)
+        # two sampler variants of the one jitted program, built lazily:
+        # the fast partial-top-k sampler when every lane's params qualify
+        # (SP.fast_eligible, checked host-side per tick), the full-sort
+        # reference otherwise — either way ONE dispatch per tick
+        self._step_fns = {}
         self.allocator = PageAllocator(engine_cfg.num_pages,
                                        engine_cfg.page_size,
                                        metrics=self.metrics)
@@ -383,6 +552,12 @@ class PagedEngine:
             "engine_ttft_hit_ticks", unit="ticks", site=_SITE)
         self._h_ttft_cold_ticks = self.metrics.histogram(
             "engine_ttft_cold_ticks", unit="ticks", site=_SITE)
+        self._c_spec_acc = self.metrics.counter(
+            "engine_spec_accepted_total", unit="tokens", site=_SITE)
+        self._c_spec_rej = self.metrics.counter(
+            "engine_spec_rejected_total", unit="tokens", site=_SITE)
+        self._h_spec_len = self.metrics.histogram(
+            "engine_spec_accepted_len", unit="tokens", site=_SITE)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: ServeRequest):
@@ -608,11 +783,25 @@ class PagedEngine:
             "req", r.rid, outcome="truncated" if truncated else "finished")
 
     # ------------------------------------------------------------------ #
+    def _spec_eligible(self, r: ServeRequest) -> bool:
+        """A decode lane speculates when (a) speculation is on, (b) it has
+        already sampled its first token — the first-token tick runs
+        non-speculatively so the prefix-cache ``a1_sig`` artifact is
+        captured at the prompt's true last position — and (c) a full
+        n-token proposal fits under ``max_seq`` (no variable-length spec
+        segments: near the cap the lane falls back to plain decode)."""
+        return (self.spec > 0 and len(r.generated) > 0
+                and r.pos + self.spec <= self.ecfg.max_seq)
+
     def _plan_pack(self) -> PackedTick:
         """Pack this tick's pending context into one flat token buffer:
-        each active lane offers up to ``prefill_chunk`` tokens (exactly one
-        when decoding) and ``pack_tokens`` fits them into the engine's
-        token budget, decode lanes first."""
+        each active lane offers up to ``prefill_chunk`` tokens when
+        prefilling — granted in rotating round-robin order (the tick
+        counter advances the start index, so no pending lane starves
+        under budget pressure) — or, when decoding, its pending token
+        plus ``spec_tokens - 1`` placeholder rows the device's draft loop
+        fills in; ``pack_tokens`` fits them into the engine's token
+        budget, decode lanes first."""
         lists, poss, dec = [], [], []
         for r in self.slots:
             if r is None:
@@ -620,17 +809,115 @@ class PagedEngine:
                 poss.append(0)
                 dec.append(False)
                 continue
-            lists.append(r.known()[r.pos:r.pos + self.ecfg.prefill_chunk])
+            decoding = len(r.known()) - r.pos == 1
+            if decoding and self._spec_eligible(r):
+                # the lane's one pending token + n-1 placeholders: rows
+                # pos+1..pos+n-1 are proposed ON DEVICE by the draft loop
+                lists.append(r.known()[r.pos:] + [0] * (self.spec - 1))
+            else:
+                lists.append(r.known()[r.pos:r.pos + self.ecfg.prefill_chunk])
             poss.append(r.pos)
-            dec.append(len(r.known()) - r.pos == 1)
+            dec.append(decoding)
         return pack_tokens(lists, poss, dec, self.budget,
-                           self.ecfg.max_prefill_tokens)
+                           self.ecfg.max_prefill_tokens, rotate=self.ticks)
+
+    def _consume_one(self, i: int, tok: int, now: float):
+        """Append one sampled token to lane i (the plain packed-tick emit
+        path: first-token artifacts, TTFT/ITL series, finish checks)."""
+        r = self.slots[i]
+        r.generated.append(tok)
+        if len(r.generated) == 1:
+            if self.pcache is not None and r.prefix_sig is None:
+                # block 1's first-attention signal at position
+                # len(prompt)-1 (this tick's seg_last row), the
+                # prefix artifact _park_prefix caches at finish
+                r.prefix_sig = np.asarray(self.cache["a1_sig"][i])
+            ttft_ms = (now - r.submit_time) * 1e3
+            ttft_ticks = self.ticks - r.submit_tick
+            self._h_ttft_ms.record(ttft_ms)
+            self._h_ttft_ticks.record(ttft_ticks)
+            if self.pcache is not None:
+                hot = r.prefix_hit_tokens > 0
+                (self._h_ttft_hit_ms if hot
+                 else self._h_ttft_cold_ms).record(ttft_ms)
+                (self._h_ttft_hit_ticks if hot
+                 else self._h_ttft_cold_ticks).record(ttft_ticks)
+        elif r.last_token_time:
+            self._h_itl_ms.record((now - r.last_token_time) * 1e3)
+        r.last_token_time = now
+        if not r.decoding:
+            r.decoding = True
+            self.tracer.instant("DECODE", rid=r.rid, slot=i,
+                                generated=len(r.generated))
+        if len(r.generated) >= r.max_new:
+            self._finish(i)
+        elif len(r.known()) >= self.ecfg.max_seq:
+            self._finish(i, truncated=True)
+
+    def _consume_spec_lane(self, i: int, tgt_row: np.ndarray,
+                           fed_row: np.ndarray, now: float):
+        """Accept the longest prefix of lane i's n-1 proposals that match
+        their verify targets, plus the bonus target after it; rewind the
+        rejected growth.  ``tgt_row[j]`` is the model's true token at
+        position pos+j+1, ``fed_row[j]`` what was packed at position
+        pos+j (row 0 the real pending token, rows 1.. the proposals)."""
+        n = self.spec
+        r = self.slots[i]
+        a = 0
+        while a < n - 1 and int(fed_row[a + 1]) == int(tgt_row[a]):
+            a += 1
+        # the emitted stream must be exactly what sequential decode would
+        # produce, truncated at the same finish boundaries
+        room = min(r.max_new - len(r.generated),
+                   self.ecfg.max_seq - len(r.known()))
+        emit = [int(t) for t in tgt_row[:a + 1][:room]]
+        r.generated.extend(emit)
+        # positions pos..pos+len(emit)-1 now hold verified context; the
+        # trailing rejected rows' pages are rewound (shrink drops only
+        # THIS table's references — shared prefix pages survive).  Their
+        # K/V stays causally invisible until the positions are re-fed.
+        r.pos += len(emit)
+        dropped = self.tables[i].shrink(r.pos)
+        self._c_decode_toks.inc(len(emit))
+        self._c_spec_acc.inc(a)
+        self._c_spec_rej.inc(n - 1 - a)
+        self._h_spec_len.record(len(emit))
+        if dropped:
+            self.tracer.instant("SPEC_ROLLBACK", rid=r.rid, slot=i,
+                                pages=dropped, accepted=a)
+        if r.last_token_time:
+            self._h_itl_ms.record((now - r.last_token_time) * 1e3)
+        r.last_token_time = now
+        if not r.decoding:
+            r.decoding = True
+            self.tracer.instant("DECODE", rid=r.rid, slot=i,
+                                generated=len(r.generated))
+        if len(r.generated) >= r.max_new:
+            self._finish(i)
+        elif len(r.known()) >= self.ecfg.max_seq:
+            self._finish(i, truncated=True)
+
+    def _step_for(self, fast):
+        """The tick's jitted program with the fast or reference sampler
+        fused in (at most two compiled variants per engine)."""
+        if fast not in self._step_fns:
+            samp = SP.fast_sampler(self.cfg.vocab) if fast else None
+            if self.spec:
+                self._step_fns[fast] = make_spec_step(
+                    self.cfg, self.plan, spec_tokens=self.spec,
+                    draft_blocks=self.ecfg.draft_blocks, sampler=samp)
+            else:
+                self._step_fns[fast] = make_packed_step(
+                    self.cfg, self.plan, sampler=samp)
+        return self._step_fns[fast]
 
     def _run_packed(self, pt: PackedTick):
         """One jitted engine call (forward + fused sampling) over a packed
         token buffer; consume samples for every request whose context
         completed this call.  Lanes may be in DIFFERENT phases: lane i
-        advances its ``pt.n_taken[i]`` packed tokens."""
+        advances its ``pt.n_taken[i]`` packed tokens (under speculation a
+        decode lane's segment spans its whole n-token proposal and may
+        emit up to n tokens)."""
         S = self.ecfg.slots
         ids = [i for i in range(S) if pt.n_taken[i] > 0]
         self.dispatches += 1
@@ -645,18 +932,58 @@ class PagedEngine:
         ps = np.ones((S,), np.float32)
         seeds = np.zeros((S,), np.int32)
         poss = np.zeros((S,), np.int32)
+        spec_mask = np.zeros((S,), bool)
         for i in ids:
-            sp = self.slots[i].sampling
+            r = self.slots[i]
+            sp = r.sampling
             temps[i], ks[i], ps[i] = sp.temperature, sp.top_k, sp.top_p
             seeds[i] = sp.seed
             # position of the would-be new token (== len(known()) exactly
             # when this call completes the request's context)
-            poss[i] = self.slots[i].pos + int(pt.n_taken[i])
+            poss[i] = r.pos + int(pt.n_taken[i])
+            # a decode lane whose segment spans > 1 row is speculating
+            # (only _plan_pack's spec-eligible lanes pack that way)
+            spec_mask[i] = (len(r.known()) - r.pos == 1
+                            and int(pt.n_taken[i]) > 1)
+        step_fn = self._step_for(all(
+            SP.fast_eligible(self.slots[i].sampling, self.cfg.vocab)
+            for i in ids))
         t0 = time.perf_counter()
+        if self.spec:
+            with self.tracer.span("engine.dispatch", annotate=True,
+                                  lanes=len(ids), live_tokens=pt.n_live,
+                                  budget=T, spec_lanes=int(spec_mask.sum())):
+                tgt, fed, self.cache = step_fn(
+                    self.params, self.cache, jnp.asarray(pt.tokens),
+                    jnp.asarray(pt.tok_slot), jnp.asarray(pt.tok_pos),
+                    jnp.asarray(bt), jnp.asarray(pt.seg_last),
+                    jnp.asarray(spec_mask), jnp.asarray(temps),
+                    jnp.asarray(ks), jnp.asarray(ps), jnp.asarray(seeds))
+            self._h_dispatch_ms.record((time.perf_counter() - t0) * 1e3)
+            tgt_np, fed_np = np.asarray(tgt), np.asarray(fed)
+            now = time.perf_counter()
+            for i in ids:
+                r = self.slots[i]
+                adv = int(pt.n_taken[i])
+                if spec_mask[i]:
+                    # pos/decode-token accounting live inside the helper:
+                    # only the ACCEPTED prefix advances the lane
+                    self._consume_spec_lane(i, tgt_np[i], fed_np[i], now)
+                    continue
+                if len(r.known()) - r.pos == 1:
+                    self._c_decode_toks.inc(adv)
+                else:
+                    self._c_prefill_toks.inc(adv)
+                r.pos += adv
+                if r.pos == len(r.known()):
+                    # non-spec lane: the verify pass's last column is the
+                    # plain packed-tick sample at position pos
+                    self._consume_one(i, int(tgt_np[i][self.spec - 1]), now)
+            return
         with self.tracer.span("engine.dispatch", annotate=True,
                               lanes=len(ids), live_tokens=pt.n_live,
                               budget=T):
-            _, nxt, self.cache = self.step_fn(
+            _, nxt, self.cache = step_fn(
                 self.params, self.cache, jnp.asarray(pt.tokens),
                 jnp.asarray(pt.tok_slot), jnp.asarray(pt.tok_pos),
                 jnp.asarray(bt), jnp.asarray(pt.seg_last),
@@ -677,35 +1004,7 @@ class PagedEngine:
             nxt_np = np.asarray(nxt)
             now = time.perf_counter()
             for i in need:
-                r = self.slots[i]
-                r.generated.append(int(nxt_np[i]))
-                if len(r.generated) == 1:
-                    if self.pcache is not None and r.prefix_sig is None:
-                        # block 1's first-attention signal at position
-                        # len(prompt)-1 (this tick's seg_last row), the
-                        # prefix artifact _park_prefix caches at finish
-                        r.prefix_sig = np.asarray(self.cache["a1_sig"][i])
-                    ttft_ms = (now - r.submit_time) * 1e3
-                    ttft_ticks = self.ticks - r.submit_tick
-                    self._h_ttft_ms.record(ttft_ms)
-                    self._h_ttft_ticks.record(ttft_ticks)
-                    if self.pcache is not None:
-                        hot = r.prefix_hit_tokens > 0
-                        (self._h_ttft_hit_ms if hot
-                         else self._h_ttft_cold_ms).record(ttft_ms)
-                        (self._h_ttft_hit_ticks if hot
-                         else self._h_ttft_cold_ticks).record(ttft_ticks)
-                elif r.last_token_time:
-                    self._h_itl_ms.record((now - r.last_token_time) * 1e3)
-                r.last_token_time = now
-                if not r.decoding:
-                    r.decoding = True
-                    self.tracer.instant("DECODE", rid=r.rid, slot=i,
-                                        generated=len(r.generated))
-                if len(r.generated) >= r.max_new:
-                    self._finish(i)
-                elif len(r.known()) >= self.ecfg.max_seq:
-                    self._finish(i, truncated=True)
+                self._consume_one(i, int(nxt_np[i]), now)
 
     # ------------------------------------------------------------------ #
     def step(self):
@@ -723,8 +1022,9 @@ class PagedEngine:
 
     def _step_packed(self):
         """ONE flat (token_budget,) dispatch: prefilling lanes advance up
-        to ``prefill_chunk`` packed tokens, decoding lanes advance 1, in
-        the same jitted call.  Page growth (``_ensure``) can preempt or
+        to ``prefill_chunk`` packed tokens, decoding lanes 1 (or pack
+        their whole n-token speculative proposal), in the same jitted
+        call.  Page growth (``_ensure``) can preempt or
         truncate lanes mid-plan; every eviction frees budget, so the pack
         is re-planned until the surviving lanes' plan sticks (each
         non-final iteration empties at least one slot, bounding the loop
@@ -817,6 +1117,19 @@ class PagedEngine:
             # radix-tree contents + hit rates, allocator sharing, COW and
             # a1_sig seeding counts, and TTFT split hot (prefix hit at
             # admission) vs cold
+            # self-speculative decoding cut (None when spec_tokens == 0):
+            # proposal acceptance counts/rate and the per-tick emitted
+            # (accepted + bonus) length distribution — mean accepted_len
+            # is the tokens-per-tick multiplier over plain decode
+            "spec": None if not self.spec else {
+                "spec_tokens": self.spec,
+                "draft_blocks": self.ecfg.draft_blocks,
+                "proposals_accepted": self._c_spec_acc.value,
+                "proposals_rejected": self._c_spec_rej.value,
+                "acceptance_rate": self._c_spec_acc.value / max(
+                    self._c_spec_acc.value + self._c_spec_rej.value, 1),
+                "accepted_len": pcts(self._h_spec_len),
+            },
             "prefix": None if self.pcache is None else {
                 **self.pcache.stats(),
                 "shared_pages": self.allocator.shared_pages,

@@ -51,6 +51,29 @@ def test_histogram_edge_cases():
     assert h2.percentile(99) == pytest.approx(7.0)          # exact extrema
 
 
+def test_histogram_percentile_extremes_match_numpy():
+    """p=0 must return the recorded MINIMUM exactly (the old rank-0 walk
+    stopped at the first bucket and returned its midpoint — badly wrong
+    for skewed data) and p=100 the maximum; both interact correctly with
+    the underflow bucket that absorbs every non-positive sample."""
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(mean=1.0, sigma=2.0, size=500)
+    h = Histogram("t")
+    for x in xs:
+        h.record(float(x))
+    assert h.percentile(0) == float(xs.min())       # exact, not a midpoint
+    assert h.percentile(100) == float(xs.max())
+    assert h.percentile(-5) == float(xs.min())      # clamped below 0
+    assert h.percentile(101) == float(xs.max())     # clamped above 100
+    # rank-1 inside the underflow bucket is the recorded min, not 0
+    h2 = Histogram("u")
+    for v in (-3.0, 0.0, 5.0, 40.0):
+        h2.record(v)
+    assert h2.percentile(0) == -3.0
+    assert h2.percentile(25) == -3.0
+    assert h2.percentile(100) == 40.0
+
+
 def test_counter_gauge_and_get_or_create():
     reg = MetricsRegistry()
     c = reg.counter("ticks", unit="ticks")

@@ -236,6 +236,25 @@ def test_pack_tokens_invariants(inp):
         assert list(pt.tokens[sel]) == lists[i][:n]          # round-trip
 
 
+@given(st.integers(1, 6), st.integers(0, 50), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_pack_tokens_round_robin_liveness(S, t0, cap):
+    """Rotation fairness: under sustained budget pressure (every tick can
+    grant only ``cap`` prefill tokens), advancing ``rotate`` by one per
+    tick must reach EVERY pending prefill lane within ``S`` consecutive
+    ticks.  The pre-rotation packer granted from slot 0 in fixed order and
+    starved the high-numbered lanes for as long as the pressure lasted."""
+    from repro.serve.scheduler import pack_tokens
+    lists = [list(range(100, 140)) for _ in range(S)]
+    positions, flags = [0] * S, [False] * S
+    advanced = set()
+    for t in range(t0, t0 + S):
+        pt = pack_tokens(lists, positions, flags, budget=max(S, cap),
+                         prefill_cap=cap, rotate=t)
+        advanced |= {i for i in range(S) if pt.n_taken[i] > 0}
+    assert advanced == set(range(S))
+
+
 @given(st.lists(st.integers(4, 12), min_size=2, max_size=3),
        st.integers(0, 2 ** 16))
 @settings(max_examples=6, deadline=None)

@@ -420,6 +420,80 @@ def test_packed_tick_compiles_one_program(monkeypatch):
     assert traces == [(4,)], traces      # narrow engine: ONE program too
 
 
+def test_pack_tokens_round_robin_reaches_every_lane():
+    """Packer-level rotation fairness (deterministic sweep; the hypothesis
+    variant lives in test_property.py): under a prefill cap of ``cap``
+    tokens per tick, advancing ``rotate`` by one per tick must reach every
+    pending prefill lane within ``slots`` ticks — the fixed slot-0 grant
+    start starved high-numbered lanes for as long as the pressure
+    lasted."""
+    from repro.serve.scheduler import pack_tokens
+    for S in (1, 2, 4, 6):
+        for t0 in (0, 3, 17):
+            for cap in (1, 2):
+                lists = [list(range(100, 140)) for _ in range(S)]
+                advanced = set()
+                for t in range(t0, t0 + S):
+                    pt = pack_tokens(lists, [0] * S, [False] * S,
+                                     budget=max(S, cap), prefill_cap=cap,
+                                     rotate=t)
+                    advanced |= {i for i in range(S) if pt.n_taken[i] > 0}
+                assert advanced == set(range(S)), (S, t0, cap)
+
+
+def test_packed_tick_prefill_rotation_no_starvation():
+    """Round-robin fairness at engine level: with the prefill budget
+    squeezed to ONE token per tick, every admitted prefilling lane must
+    still advance within ``slots`` ticks (the pre-rotation packer granted
+    slot 0 first every tick, starving the last slot for the whole length
+    of the earlier prompts)."""
+    cfg, params = _cfg_params()
+    eng = PagedEngine(cfg, params, EngineConfig(
+        page_size=8, num_pages=48, slots=4, prefill_chunk=8, max_seq=64,
+        max_prefill_tokens=1))
+    for r in _reqs(cfg, n=4):
+        eng.submit(r)
+    stall = {}
+    last_pos = {}
+    worst = 0
+    while any(s is not None for s in eng.slots) or eng.queue:
+        eng.step()
+        for r in eng.slots:
+            if r is None or r.pos >= len(r.known()) - 1:
+                continue                    # decoding/done lanes never starve
+            if last_pos.get(r.rid) == r.pos:
+                stall[r.rid] = stall.get(r.rid, 0) + 1
+                worst = max(worst, stall[r.rid])
+            else:
+                stall[r.rid] = 0
+            last_pos[r.rid] = r.pos
+    assert worst < eng.ecfg.slots, worst
+    assert len(eng.finished) == 4
+
+
+def test_packed_step_idle_lane_emits_sentinel():
+    """Lanes sitting a tick out (seg_last == -1) must return the -1
+    sentinel, never a token sampled from another lane's (or the scratch
+    row's) hidden state — the old clamp-to-row-0 gather ran the LM head +
+    sampler on garbage and handed back a plausible-looking id."""
+    from repro.serve.scheduler import make_packed_step
+    cfg, params = _cfg_params()
+    step = make_packed_step(cfg)
+    cache = M.init_paged_cache(cfg, 8, 8, 2, "float32")
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    tokens = jnp.asarray([5, 6, 7, 0], jnp.int32)
+    tok_slot = jnp.zeros((4,), jnp.int32)
+    tok_pos = jnp.asarray([0, 1, 2, -1], jnp.int32)
+    seg_last = jnp.asarray([2, -1], jnp.int32)      # slot 1 sits out
+    z = jnp.zeros((2,), jnp.int32)
+    _, nxt, _ = step(params, cache, tokens, tok_slot, tok_pos, bt,
+                     seg_last, jnp.zeros((2,)), z, jnp.ones((2,)), z,
+                     jnp.asarray([3, 0], jnp.int32))
+    nxt = np.asarray(nxt)
+    assert nxt[0] >= 0                              # live lane sampled
+    assert nxt[1] == -1                             # idle lane: sentinel
+
+
 def test_packed_tick_occupancy_counts_active_lanes():
     """Occupancy = active lanes / slots per dispatch; a lone request in a
     4-slot engine must report 0.25, full slots report 1.0."""
@@ -463,6 +537,61 @@ def test_sampler_topk_mask_respected():
             assert toks[b] in topk_sets[b]
 
 
+def test_sampler_topk_exact_on_ties():
+    """top-k must keep exactly k candidates even when logits tie at the
+    threshold (the old ``>= thr`` mask kept every tied value, silently
+    sampling from more than k); ties break toward lower vocab ids (stable
+    sort).  Verified against a numpy reference over tied/degenerate
+    distributions."""
+    from repro.serve.sampling import _mask_top_k
+    kept = np.isfinite(np.asarray(_mask_top_k(
+        jnp.asarray([1.0, 2.0, 2.0, 2.0, 0.5, 2.0]), jnp.int32(2))))
+    assert kept.sum() == 2
+    assert list(np.nonzero(kept)[0]) == [1, 2]
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        V = int(rng.integers(2, 40))
+        vals = rng.choice([-1.0, 0.0, 0.25, 1.0, 3.0], size=V)
+        k = int(rng.integers(1, V + 1))
+        kept = np.isfinite(np.asarray(_mask_top_k(jnp.asarray(vals),
+                                                  jnp.int32(k))))
+        ref = np.zeros(V, bool)
+        ref[np.argsort(-vals, kind="stable")[:k]] = True
+        assert kept.sum() == k, (vals, k)
+        assert np.array_equal(kept, ref), (vals, k)
+
+
+def test_sampler_topp_exact_sorted_prefix():
+    """top-p keeps the MINIMAL sorted prefix whose exclusive mass is
+    below p — tied probabilities past the boundary must not inflate the
+    nucleus (four 0.25s at p=0.5 keep exactly two, not four), p == 0
+    degenerates to top-1, p >= 1 keeps everything."""
+    from repro.serve.sampling import _mask_top_p
+    kept = np.isfinite(np.asarray(_mask_top_p(jnp.zeros((4,)),
+                                              jnp.float32(0.5))))
+    assert kept.sum() == 2
+    assert np.isfinite(np.asarray(_mask_top_p(jnp.zeros((4,)),
+                                              jnp.float32(0.0)))).sum() == 1
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        V = int(rng.integers(2, 40))
+        logits = rng.choice([0.0, 0.0, 1.0, 2.0], size=V)
+        p = float(rng.choice([0.0, 0.3, 0.5, 0.9, 0.999, 1.0]))
+        got = np.isfinite(np.asarray(_mask_top_p(jnp.asarray(logits),
+                                                 jnp.float32(p))))
+        if p >= 1.0:
+            ref = np.ones(V, bool)
+        else:
+            probs = np.exp(logits - logits.max())
+            probs = (probs / probs.sum()).astype(np.float32)
+            order = np.argsort(-probs, kind="stable")
+            keep_sorted = (np.cumsum(probs[order]) - probs[order]) < p
+            keep_sorted[0] = True
+            ref = np.zeros(V, bool)
+            ref[order] = keep_sorted
+        assert np.array_equal(got, ref), (logits, p)
+
+
 def test_sampler_key_is_position_derived():
     """Same (seed, position) -> same draw; different positions -> an
     independent stream (the property preemption-resume determinism rests
@@ -477,6 +606,75 @@ def test_sampler_key_is_position_derived():
     draws = {int(SP.sample_tokens(*args, jnp.asarray([p], jnp.int32))[0])
              for p in range(5, 13)}
     assert len(draws) > 1                    # pos actually enters the key
+
+
+def test_fast_sampler_bit_equal_to_reference():
+    """The partial-top-k fast sampler must be a BIT-EXACT drop-in for the
+    reference ``sample_one`` on every eligible lane (greedy, or
+    ``1 <= top_k <= TOPK_FAST_CAP``), across top-p values including the
+    degenerate p == 0 / p >= 1 ends, temperatures, seeds and positions.
+    Exactness is what lets the engine pick the variant per tick without
+    perturbing seeded streams."""
+    V = 512
+    fast = jax.jit(jax.vmap(SP.fast_sampler(V)))
+    ref = SP.sample_tokens
+    rng = np.random.default_rng(7)
+    for case in range(8):
+        # tie-heavy logits stress the stable-order guarantee
+        logits = jnp.asarray(rng.choice(
+            [-2.0, 0.0, 0.0, 0.5, 1.0, 3.0], size=(6, V)).astype(np.float32))
+        for k in (1, 5, 50, SP.TOPK_FAST_CAP):
+            for p in (0.0, 0.3, 0.95, 1.0):
+                for temp in (0.0, 0.7, 1.5):
+                    B = logits.shape[0]
+                    args = (logits, jnp.full((B,), temp),
+                            jnp.full((B,), k, jnp.int32), jnp.full((B,), p),
+                            jnp.arange(B, dtype=jnp.int32) + case,
+                            jnp.arange(B, dtype=jnp.int32) * 3)
+                    assert np.array_equal(np.asarray(fast(*args)),
+                                          np.asarray(ref(*args))), \
+                        (case, k, p, temp)
+
+
+def test_fast_sampler_eligibility():
+    """Greedy lanes are always eligible; seeded lanes only when top_k is
+    active and within the cap (top_k disabled or above the cap needs the
+    full-vocab reference masks)."""
+    V = 2048
+    assert SP.fast_eligible(SP.SamplingParams(), V)
+    assert SP.fast_eligible(SP.SamplingParams(temperature=0.9, top_k=50), V)
+    assert SP.fast_eligible(
+        SP.SamplingParams(temperature=0.9, top_k=SP.TOPK_FAST_CAP), V)
+    assert not SP.fast_eligible(
+        SP.SamplingParams(temperature=0.9, top_k=SP.TOPK_FAST_CAP + 1), V)
+    assert not SP.fast_eligible(SP.SamplingParams(temperature=0.9, top_k=0), V)
+    assert not SP.fast_eligible(
+        SP.SamplingParams(temperature=0.9, top_k=0, top_p=0.9), V)
+
+
+def test_engine_reference_fallback_above_cap_reproducible():
+    """A lane with top_k above the fast cap forces the reference program
+    for that tick; streams stay deterministic and the tick still costs one
+    dispatch."""
+    cfg, params = _cfg_params()
+    ecfg = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
+                        max_seq=64)
+
+    def run():
+        eng = PagedEngine(cfg, params, ecfg)
+        for i in range(3):
+            eng.submit(ServeRequest(
+                rid=i, prompt=(np.arange(5) + i) % cfg.vocab, max_new=6,
+                sampling=SP.SamplingParams(temperature=0.8,
+                                        top_k=SP.TOPK_FAST_CAP + 40,
+                                        top_p=0.95, seed=i)))
+        done = eng.run()
+        return {d.rid: d.generated for d in done}, eng.stats()
+
+    a, st = run()
+    b, _ = run()
+    assert a == b
+    assert st["dispatches_per_tick"] == 1.0
 
 
 # --------------------------------------------------------------------------- #

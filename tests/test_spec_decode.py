@@ -1,0 +1,232 @@
+"""Self-speculative decoding on the packed tick (EngineConfig.spec_tokens):
+the FAL early-exit draft proposes n-1 tokens per decode lane inside the
+engine's ONE jitted dispatch, the full-depth packed forward verifies the
+whole proposal as a single length-n segment, and exact-match acceptance
+keeps greedy AND seeded token streams bit-identical to non-speculative
+decode — across all six connection styles, the dual-branch dispatch,
+preemption mid-speculation and prefix-cache hits (rollback never frees
+shared pages; the allocator drains fully after every test)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels import ops
+from repro.models import model as M
+from repro.serve import sampling as SP
+from repro.serve.scheduler import EngineConfig, PagedEngine, ServeRequest
+
+SIX_STYLES = ("preln", "parallel", "fal", "falplus", "ablation1", "ablation2")
+
+BASE = EngineConfig(page_size=8, num_pages=48, slots=4, prefill_chunk=8,
+                    max_seq=64)
+# the reduced test config has 2 layers, so the draft runs block 0 only
+SPEC = dataclasses.replace(BASE, spec_tokens=4, draft_blocks=1)
+
+
+def _cfg_params(conn="fal"):
+    cfg = get_config("llama3.2-3b").reduced().replace(connection=conn)
+    return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _reqs(cfg, n=4, seed=1, temp=0.0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rid=i, prompt=rng.integers(0, cfg.vocab, 4 + i % 7),
+        max_new=6 + 3 * (i % 3),
+        sampling=SP.SamplingParams(temperature=temp, top_k=50, top_p=0.95,
+                                   seed=i))
+        for i in range(n)]
+
+
+def _run(cfg, params, ecfg, reqs):
+    eng = PagedEngine(cfg, params, ecfg)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run(max_ticks=500)
+    assert len(done) == len(reqs)
+    return {r.rid: list(r.generated) for r in done}, eng
+
+
+@pytest.mark.parametrize("conn", SIX_STYLES)
+def test_spec_identity_styles(conn):
+    """Exact-match speculative sampling is LOSSLESS: the spec engine must
+    emit bit-identical greedy and seeded token streams to the plain packed
+    engine for every connection style, in ONE dispatch per tick."""
+    cfg, params = _cfg_params(conn)
+    for temp in (0.0, 0.9):
+        ref, _ = _run(cfg, params, BASE, _reqs(cfg, temp=temp))
+        got, eng = _run(cfg, params, SPEC, _reqs(cfg, temp=temp))
+        assert got == ref, (conn, temp)
+        st = eng.stats()
+        assert st["dispatches_per_tick"] == 1.0, (conn, temp)
+        assert st["spec"]["proposals_accepted"] \
+            + st["spec"]["proposals_rejected"] > 0
+        assert eng.allocator.in_use == 0           # every page drained
+
+
+def test_spec_matches_dense_oracle():
+    """Greedy spec-engine tokens equal the dense full-forward oracle
+    token-for-token (the end-to-end losslessness proof: accept-prefix
+    verification reproduces sequential decode exactly)."""
+    cfg, params = _cfg_params("fal")
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6]) % cfg.vocab
+    max_new = 8
+    toks = list(prompt)
+    for _ in range(max_new):
+        lg, _, _ = M.forward(params, cfg,
+                             {"tokens": jnp.asarray([toks])}, "train")
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    oracle = toks[len(prompt):]
+    eng = PagedEngine(cfg, params, SPEC)
+    eng.submit(ServeRequest(rid=0, prompt=prompt, max_new=max_new))
+    assert eng.run()[0].generated == oracle
+    assert eng.allocator.in_use == 0
+
+
+def test_spec_dual_branch():
+    """Speculation composes with the dual-branch (MHA||MLP) dispatch:
+    same tokens as the sequential non-spec engine."""
+    cfg, params = _cfg_params("fal")
+    for temp in (0.0, 0.9):
+        ref, _ = _run(cfg, params, BASE, _reqs(cfg, temp=temp))
+        got, eng = _run(cfg, params,
+                        dataclasses.replace(SPEC, dual_branch=True),
+                        _reqs(cfg, temp=temp))
+        assert eng.plan.dual_branch
+        assert got == ref, temp
+        assert eng.allocator.in_use == 0
+
+
+def test_spec_preemption_mid_speculation():
+    """Page pressure preempts lanes mid-speculation (rollback + requeue +
+    re-prefill); the resumed streams must still equal the unconstrained
+    non-spec engine's."""
+    cfg, params = _cfg_params("fal")
+    ref, _ = _run(cfg, params, BASE, _reqs(cfg, n=10))
+    tight = dataclasses.replace(SPEC, num_pages=9)
+    got, eng = _run(cfg, params, tight, _reqs(cfg, n=10))
+    assert eng.stats()["preemptions"] > 0      # pressure actually preempted
+    assert got == ref
+    assert eng.allocator.in_use == 0
+
+
+def test_spec_prefix_cache_rollback_keeps_shared_pages():
+    """Spec rollback under prefix sharing: a hit request's rejected growth
+    is rewound WITHOUT freeing the shared prefix pages (shrink drops only
+    the table's own references), and the emitted stream still matches the
+    non-spec prefix-cache engine."""
+    cfg, params = _cfg_params("fal")
+    pc_base = dataclasses.replace(BASE, prefix_cache=True)
+    pc_spec = dataclasses.replace(SPEC, prefix_cache=True)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 17)
+
+    def reqs():
+        # same prompt twice, sequentially: the second admission full-prompt
+        # hits the parked prefix and speculates over shared pages
+        return [ServeRequest(rid=i, prompt=prompt, max_new=8,
+                             sampling=SP.SamplingParams(temperature=0.9,
+                                                        top_k=50, seed=7))
+                for i in range(2)]
+
+    def run(ecfg):
+        eng = PagedEngine(cfg, params, ecfg)
+        eng.submit(reqs()[0])
+        eng.run()
+        eng.submit(reqs()[1])
+        done = eng.run()
+        return {r.rid: list(r.generated) for r in done}, eng
+
+    ref, _ = run(pc_base)
+    got, eng = run(pc_spec)
+    assert got == ref
+    assert got[0] == got[1]                     # same prompt+seed, same stream
+    st = eng.stats()
+    assert st["prefix"]["hits"] >= 1
+    assert st["spec"]["proposals_accepted"] > 0
+    # only the parked tree holds pages now; draining it empties the pool
+    assert eng.allocator.in_use == st["prefix"]["cached_pages"]
+    eng.pcache.evict(eng.allocator.capacity)
+    assert eng.allocator.in_use == 0
+
+
+def test_spec_one_trace_and_draft_telemetry(monkeypatch):
+    """The whole speculative step — n-1 draft iterations + verify — lives
+    inside ONE jitted program: the full-depth packed forward traces exactly
+    once, the early-exit draft n-1 times (unrolled, same trace), and the
+    draft's kernel dispatches surface as '<site>.draft' telemetry rows."""
+    cfg, params = _cfg_params("fal")
+    verify, draft = [], []
+    ov, od = M.paged_decode_step, M.paged_spec_draft
+
+    def cv(params, cfg_, batch, cache, plan=None, **kw):
+        verify.append(tuple(batch["tokens"].shape))
+        return ov(params, cfg_, batch, cache, plan, **kw)
+
+    def cd(params, cfg_, batch, cache, plan=None, **kw):
+        draft.append(tuple(batch["tokens"].shape))
+        return od(params, cfg_, batch, cache, plan, **kw)
+
+    monkeypatch.setattr(M, "paged_decode_step", cv)
+    monkeypatch.setattr(M, "paged_spec_draft", cd)
+    # NOTE: no reset_dispatch_paths() here — the records fire at INNER-jit
+    # trace time, and an earlier test in this process may already have
+    # traced these shapes (the paths dict is global and monotonic)
+    _, eng = _run(cfg, params, SPEC, _reqs(cfg))
+    # budget = slots * spec + chunk - 1 = 4*4 + 8 - 1 = 23
+    assert verify == [(23,)], verify
+    assert draft == [(4,)] * (SPEC.spec_tokens - 1), draft
+    paths = ops.dispatch_paths()
+    assert "paged_packed_attention" in paths
+    assert "paged_packed_attention.draft" in paths
+    st = eng.stats()
+    assert st["dispatches_per_tick"] == 1.0
+    assert st["packed_calls"] == st["ticks"]
+
+
+def test_spec_acceptance_measured():
+    """Seeded sampling shares the draft's fold_in(seed, position) keys, so
+    proposals frequently match their targets: the acceptance telemetry
+    must show real multi-token ticks (mean emitted length > 1)."""
+    cfg, params = _cfg_params("fal")
+    _, eng = _run(cfg, params, SPEC, _reqs(cfg, temp=0.9))
+    spec = eng.stats()["spec"]
+    assert spec["proposals_accepted"] > 0
+    assert spec["accepted_len"]["mean"] > 1.0
+    assert 0.0 < spec["acceptance_rate"] <= 1.0
+
+
+def test_spec_config_validation():
+    """spec_tokens == 1 (no proposal), out-of-range draft_blocks and a
+    budget that can't hold every lane's n-token segment are construction
+    errors, not silent misconfigurations."""
+    cfg, params = _cfg_params("fal")
+    for bad in (dict(spec_tokens=1),
+                dict(spec_tokens=4, draft_blocks=0),
+                dict(spec_tokens=4, draft_blocks=cfg.n_layers),
+                dict(spec_tokens=4, draft_blocks=1, token_budget=7)):
+        with pytest.raises(ValueError):
+            PagedEngine(cfg, params,
+                        dataclasses.replace(BASE, **bad))
+    with pytest.raises(ValueError):
+        M.paged_spec_draft(params, cfg, {}, {}, draft_blocks=cfg.n_layers)
+
+
+def test_spec_near_max_seq_falls_back_to_plain_decode():
+    """A lane whose full n-token proposal would cross max_seq decodes
+    plainly (no variable-length spec segments) and still finishes with
+    exactly the non-spec engine's truncated stream."""
+    cfg, params = _cfg_params("fal")
+    small = dataclasses.replace(BASE, max_seq=24)
+    small_spec = dataclasses.replace(SPEC, max_seq=24)
+    reqs = lambda: [ServeRequest(rid=0, prompt=np.arange(15) % cfg.vocab,
+                                 max_new=20)]
+    ref, _ = _run(cfg, params, small, reqs())
+    got, eng = _run(cfg, params, small_spec, reqs())
+    assert got == ref
+    assert eng.finished[0].truncated           # hit the context cap
+    assert eng.allocator.in_use == 0
