@@ -113,9 +113,53 @@ def bench(csv, sp=False):
         payloads[method] = b
         csv(f"comm_fig7_payload_{method}", 0, str(b))
 
+    # Measured TP gradient wire bytes: lower value_and_grad of the fal stack
+    # per ExecutionPlan.grad_compress method and read per-device ring-model
+    # payload off the compiled HLO (core/tp.py::collective_payload_bytes —
+    # NOT output-shape bytes, which would misrank the int8 all_to_all/
+    # all_gather exchange).  Gradient payload = payload(grad HLO) −
+    # payload(fwd HLO): the backward cotangent reductions only.  The small
+    # exact residue under compression is the LN parameter-gradient psums
+    # shard_map's transpose inserts for replicated params.
+    from repro.core.tp import collective_payload_bytes
+    cfg_g = cfg0.replace(connection="fal")
+    params_g = M.init_params(jax.random.PRNGKey(0), cfg_g)
+    B_G, S_G = 4, 64            # training-shaped batch: activation cotangents
+    x_g = jax.random.normal(jax.random.PRNGKey(2), (B_G, S_G, cfg0.d_model))
+    pos_g = jnp.broadcast_to(jnp.arange(S_G)[None], (B_G, S_G))
+    grad_payloads, fwd_payload = {}, 0
+    for method in grad_compress.GRAD_COMPRESS_METHODS:
+        plan_g = ExecutionPlan.from_mesh(
+            mesh, tp="explicit", grad_compress=method).validate(cfg_g)
+
+        def loss(p, xx, plan=plan_g):
+            y = M.decoder_stack_tp(p, cfg_g, xx, pos_g, plan)[0]
+            return jnp.mean(y * y)
+
+        t0 = time.time()
+        hlo_f = jax.jit(loss).lower(params_g, x_g).compile().as_text()
+        hlo_g = jax.jit(jax.value_and_grad(loss)).lower(
+            params_g, x_g).compile().as_text()
+        lower_s = time.time() - t0
+        pf = sum(collective_payload_bytes(hlo_f, TP).values())
+        pg = sum(collective_payload_bytes(hlo_g, TP).values())
+        grad_payloads[method] = pg - pf
+        if method == "none":
+            fwd_payload = pf
+        csv(f"comm_grad_payload_{method}", lower_s * 1e6,
+            f"grad_bytes={pg - pf};fwd_bytes={pf}")
+    assert grad_payloads["int8"] <= 0.3 * grad_payloads["none"], (
+        f"grad_compress=int8 gradient payload not <=0.3x of none: "
+        f"{grad_payloads}")
+    assert grad_payloads["lowrank"] < grad_payloads["none"], grad_payloads
+    csv("comm_grad_payload_ratio_int8_over_none", 0,
+        f"{grad_payloads['int8'] / max(grad_payloads['none'], 1):.3f}")
+
     return {"model": cfg0.arch_id, "n_layers": N_LAYERS, "tp_size": TP,
             "batch": B, "seq": S, "d_model": cfg0.d_model,
             "allreduce_per_mode": rows,
             "sp": sp_rows,
             "ratio_fal_over_preln": ratio, "ratio_expected": expected,
-            "fig7_payload_bytes": payloads}
+            "fig7_payload_bytes": payloads,
+            "grad_payload_bytes": grad_payloads,
+            "grad_payload_fwd_bytes": fwd_payload}

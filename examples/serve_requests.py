@@ -172,6 +172,34 @@ hot.run()
 print(f"full-prompt hit: {hot.stats()['prefill_tokens'] - before} prefill "
       f"tokens dispatched (entered decode on its first tick)")
 
+# --- quantized KV pages: int8 storage + per-page-row fp32 scales -----------
+# EngineConfig(kv_dtype="int8") stores every layer's K/V page pools at one
+# byte per element plus a (num_pages, page_size) fp32 scale pool — one
+# amax/127 scale per cached token row, shared across KV heads.  The paged
+# kernels dequantize at the VMEM load and accumulate softmax in fp32, so
+# the quality cost is a bounded logit perturbation while the page pool
+# shrinks ~4x vs float32 (~2x vs bf16): at equal num_pages that is ~2x
+# concurrent requests per HBM byte (the capacity knob behind
+# preemption-by-page-pressure).  The scales are history-free — a row's
+# scale depends only on that row's values — so COW page copies and radix
+# prefix-cache shares stay bit-exact and the prefix/spec suites run
+# unchanged under quantization.
+quant = PagedEngine(cfg, params,
+                    EngineConfig(page_size=8, num_pages=48, slots=4,
+                                 prefill_chunk=8, max_seq=128,
+                                 kv_dtype="int8"),
+                    plan=plan)
+for i, p in enumerate(prompts):
+    quant.submit(ServeRequest(rid=i, prompt=p, max_new=8 + 3 * (i % 3)))
+done_q = quant.run()
+pq, pf = quant.stats()["pages"], engine.stats()["pages"]
+print(f"quantized engine (kv_dtype=int8): {pq['page_bytes']} bytes/page vs "
+      f"{pf['page_bytes']} float32 ({pf['page_bytes']/pq['page_bytes']:.1f}x "
+      f"more requests per HBM byte at equal num_pages); peak KV bytes "
+      f"{pq['peak_bytes_in_use']} vs {pf['peak_bytes_in_use']}; quantized "
+      f"dispatches trace as "
+      f"{[s for s in dispatch_paths() if s.endswith('.int8')]}")
+
 # --- dual-branch decode: MHA||MLP off the cached FAL signal ----------------
 # valid only for fal/parallel-family connections (ExecutionPlan.validate
 # rejects preln/falplus loudly); on the CPU dispatch path logits — and

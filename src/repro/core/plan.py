@@ -36,6 +36,14 @@ Plan axes:
   execution of MHA and MLP" claim at serving time).  Valid only for
   decode/paged phases and connection modes whose MLP input is independent
   of the block's own attention (``core.fal.DUAL_BRANCH_MODES``).
+* ``grad_compress`` — none | int8 | lowrank.  Opt-in compressed BACKWARD
+  collectives under explicit TP: the forward psum/psum_scatter structure
+  is untouched, but each one's transpose — the TP *gradient* all-reduce /
+  all-gather — runs through ``optim/grad_compress.py``'s QSGD-int8 or
+  PowerSGD-low-rank exchange (``compressed_psum`` /
+  ``compressed_psum_scatter``), cutting measured gradient payload bytes
+  ~4x for int8 (``bench_comm --json`` → ``grad_payload_bytes``).  Lossy
+  by design, like the Fig 7 baselines; 'none' lowers byte-identical HLO.
 
 Inside the explicit-TP shard_map the blocks see ``plan.inner()`` — the same
 plan with ``mesh=None`` and ``local_tp_size`` set; ``plan.tp_axis`` is then
@@ -114,6 +122,7 @@ class ExecutionPlan:
     tp: TPStyle = TPStyle.NONE
     sequence_parallel: bool = False
     dual_branch: bool = False
+    grad_compress: str = "none"            # none | int8 | lowrank
     mesh: Any = None                       # jax.sharding.Mesh | None
     data_axes: Tuple[str, ...] = ()
     model_axis: str = "model"
@@ -130,7 +139,8 @@ class ExecutionPlan:
     def from_mesh(cls, mesh, *, tp="gspmd", sp: bool = False,
                   phase=Phase.TRAIN, model_axis: str = "model",
                   data_axes: Optional[Tuple[str, ...]] = None,
-                  dual_branch: bool = False) -> "ExecutionPlan":
+                  dual_branch: bool = False,
+                  grad_compress: str = "none") -> "ExecutionPlan":
         """Plan over ``mesh``.  ``data_axes`` defaults to every mesh axis
         except ``model_axis`` (so a ("pod", "data", "model") mesh composes
         pure DP across pods automatically)."""
@@ -139,7 +149,8 @@ class ExecutionPlan:
         return cls(phase=Phase.coerce(phase), tp=TPStyle.coerce(tp),
                    sequence_parallel=bool(sp), mesh=mesh,
                    data_axes=tuple(data_axes), model_axis=model_axis,
-                   dual_branch=bool(dual_branch))
+                   dual_branch=bool(dual_branch),
+                   grad_compress=str(grad_compress))
 
     @classmethod
     def resolve(cls, plan) -> "ExecutionPlan":
@@ -167,6 +178,10 @@ class ExecutionPlan:
     def with_dual_branch(self, flag: bool = True) -> "ExecutionPlan":
         """Same plan with MHA||MLP decode branch parallelism toggled."""
         return dataclasses.replace(self, dual_branch=bool(flag))
+
+    def with_grad_compress(self, method: str) -> "ExecutionPlan":
+        """Same plan with compressed backward TP collectives selected."""
+        return dataclasses.replace(self, grad_compress=str(method))
 
     def inner(self) -> "ExecutionPlan":
         """The plan a shard_map local body sees: no mesh (collectives are
@@ -225,6 +240,16 @@ class ExecutionPlan:
                 f"single tokens against KV caches")
         if self.dual_branch:
             self._validate_dual_branch(cfg)
+        if self.grad_compress not in ("none", "int8", "lowrank"):
+            raise ValueError(
+                f"unknown grad_compress {self.grad_compress!r}; valid: "
+                f"none/int8/lowrank (optim/grad_compress.py methods)")
+        if self.grad_compress != "none" and self.tp is not TPStyle.EXPLICIT:
+            raise ValueError(
+                "grad_compress != 'none' requires tp='explicit': the "
+                "compressed collectives wrap the explicit-TP partial-sum "
+                "psums (models/blocks.py); there is no GSPMD/replicated "
+                "gradient-compression path")
         if self.tp is TPStyle.EXPLICIT:
             if self.mesh is None:
                 raise ValueError("tp='explicit' requires a mesh (the "

@@ -48,7 +48,7 @@ def bench_stack_config(n_layers, d, d_ff, n_heads, mode):
 
 
 def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model",
-                    sp=False):
+                    sp=False, grad_compress="none"):
     """(init_fn, jitted forward) for an n_layer unified-block TP stack.
 
     The params are real ``models/blocks.py`` block weights (the same trees
@@ -57,7 +57,10 @@ def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model",
     — so HLO lowered from here IS the production collective structure, not
     a toy's.  ``sp=True`` lowers the sequence-parallel layout (activations
     sharded over ``axis`` along the sequence; reduce-scatter/all-gather
-    pairs instead of all-reduces).
+    pairs instead of all-reduces).  ``grad_compress`` ∈ {none, int8,
+    lowrank} routes the BACKWARD cotangent reductions through
+    ``optim/grad_compress.py``'s compressed collectives (forward HLO is
+    unchanged; ``bench_comm`` diffs the gradient wire bytes).
     """
     from repro.core.plan import ExecutionPlan
     from repro.models import blocks as BL
@@ -65,7 +68,8 @@ def make_tp_forward(mesh, n_layers, d, d_ff, n_heads, mode, axis="model",
 
     cfg = bench_stack_config(n_layers, d, d_ff, n_heads, mode)
     plan = ExecutionPlan.from_mesh(mesh, tp="explicit", sp=sp,
-                                   model_axis=axis).validate(cfg)
+                                   model_axis=axis,
+                                   grad_compress=grad_compress).validate(cfg)
 
     def init_fn(key):
         k0, ks = jax.random.split(key)
@@ -201,12 +205,14 @@ def count_collectives(hlo_text: str):
     return counts
 
 
+_DT_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+             "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "s32": 4, "u32": 4,
+             "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+
 def collective_bytes(hlo_text: str):
     """Sum output-shape bytes of collective ops in HLO text (roofline ICI
     term).  Parses shapes like 'bf16[2,16,128]{...}'."""
-    dt_bytes = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-                "f64": 8, "c64": 8, "c128": 16}
     total = {}
     pat = re.compile(r"=\s+\(?([a-z0-9]+)\[([0-9,]*)\][^)]*?\s+"
                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
@@ -216,11 +222,63 @@ def collective_bytes(hlo_text: str):
         if not m:
             continue
         dt, dims, op = m.group(1), m.group(2), m.group(3)
-        if dt not in dt_bytes:
+        if dt not in _DT_BYTES:
             continue
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total[op] = total.get(op, 0) + n * dt_bytes[dt]
+        total[op] = total.get(op, 0) + n * _DT_BYTES[dt]
+    return total
+
+
+_COLL_DEF_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_payload_bytes(hlo_text: str, tp: int):
+    """Per-device WIRE bytes of every collective in HLO text under a ring
+    model — the quantity gradient compression actually shrinks (the naive
+    output-shape sum misranks e.g. an int8 all_gather whose OUTPUT is full
+    size but whose wire traffic is 1/tp of it):
+
+      all-reduce      2·out·(tp-1)/tp   (reduce-scatter + all-gather ring)
+      all-gather        out·(tp-1)/tp   (out = the gathered full tensor)
+      reduce-scatter    out·(tp-1)      (out = the reduced shard)
+      all-to-all        out·(tp-1)/tp   (keeps 1/tp of its own data local)
+      collective-permute out
+
+    Unlike ``collective_bytes`` this handles TUPLE-output collectives (XLA
+    lowers ``lax.all_to_all`` to one, which the single-shape regex drops)
+    by summing every shape token in the output type.  ``-done`` halves of
+    async pairs are skipped; ``-start`` counts once.  Returns
+    {op: per-device wire bytes}."""
+    total = {}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        m = _COLL_DEF_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        out = 0
+        for dt, dims in _SHAPE_RE.findall(line[line.index(" = "):m.start()]):
+            if dt not in _DT_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out += n * _DT_BYTES[dt]
+        if op == "all-reduce":
+            wire = 2 * out * (tp - 1) // tp
+        elif op in ("all-gather", "all-to-all"):
+            wire = out * (tp - 1) // tp
+        elif op == "reduce-scatter":
+            wire = out * (tp - 1)
+        else:
+            wire = out
+        total[op] = total.get(op, 0) + wire
     return total

@@ -68,6 +68,20 @@ def dispatch_site_suffix(suffix: str):
         _SITE_SUFFIX = prev
 
 
+def _kv_variant(site: str, k_pages, k_scale) -> str:
+    """Dotted site label for quantized-KV dispatches: a paged call with
+    scale pools present traces as ``<site>.<storage>`` (e.g.
+    ``paged_packed_attention.int8``) so runtime telemetry separates the
+    quantized engine's kernel path from the unquantized one.  Scale-less
+    calls keep the bare site name whatever the cache dtype."""
+    if k_scale is None:
+        return site
+    name = jnp.dtype(k_pages.dtype).name
+    if name.startswith("float8"):
+        name = "fp8"
+    return f"{site}.{name}"
+
+
 def dispatch_paths() -> dict:
     """{call site: 'fused-tpu' | 'cpu-fallback'} for every dispatcher
     traced so far in this process."""
@@ -101,23 +115,31 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
-                           use_pallas=None, interpret=False):
+                           k_scale=None, v_scale=None, use_pallas=None,
+                           interpret=False):
     """Paged-KV decode attention: q (B,H,D) against (P,page,Hkv,D*) pools
-    addressed through (B,T) block tables.  Pallas kernel on TPU; gather-based
-    jnp oracle on CPU (identical numerics)."""
+    addressed through (B,T) block tables; optional (P,page) fp32
+    ``k_scale``/``v_scale`` pools dequantize narrow-dtype pages at the
+    VMEM load (fp32 softmax accumulate).  Pallas kernel on TPU;
+    gather-based jnp oracle on CPU (identical numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    _record_dispatch("paged_decode_attention", use_pallas or interpret)
+    _record_dispatch(_kv_variant("paged_decode_attention", k_pages, k_scale),
+                     use_pallas or interpret)
     if use_pallas or interpret:
         from repro.kernels import paged_attention as _pa
         return _pa.paged_decode_attention(q, k_pages, v_pages, block_tables,
-                                          seq_lens, interpret=interpret)
+                                          seq_lens, k_scale=k_scale,
+                                          v_scale=v_scale,
+                                          interpret=interpret)
     return _ref.paged_attention_ref(q, k_pages, v_pages, block_tables,
-                                    seq_lens)
+                                    seq_lens, k_scale=k_scale,
+                                    v_scale=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
-                          use_pallas=None, interpret=False):
+                          k_scale=None, v_scale=None, use_pallas=None,
+                          interpret=False):
     """Chunked paged attention (per-lane rectangular layout; the serving
     engine now packs tokens through ``paged_packed_attention``): q (B,C,H,D)
     chunks at per-lane positions ``pos`` (first ``n_valid`` rows of each
@@ -128,18 +150,23 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
     and must not be read.  Pallas kernel on TPU; gather-based jnp oracle on
     CPU (identical numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    _record_dispatch("paged_chunk_attention", use_pallas or interpret)
+    _record_dispatch(_kv_variant("paged_chunk_attention", k_pages, k_scale),
+                     use_pallas or interpret)
     if use_pallas or interpret:
         from repro.kernels import paged_attention as _pa
         return _pa.paged_chunk_attention(q, k_pages, v_pages, block_tables,
-                                         pos, n_valid, interpret=interpret)
+                                         pos, n_valid, k_scale=k_scale,
+                                         v_scale=v_scale,
+                                         interpret=interpret)
     return _ref.paged_chunk_attention_ref(q, k_pages, v_pages, block_tables,
-                                          pos, n_valid)
+                                          pos, n_valid, k_scale=k_scale,
+                                          v_scale=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
-                           tok_pos, *, use_pallas=None, interpret=False):
+                           tok_pos, *, k_scale=None, v_scale=None,
+                           use_pallas=None, interpret=False):
     """Packed ragged paged attention (the token-packed serving kernel):
     q (T,H,D) — one flat token buffer where token t belongs to lane
     ``tok_slot[t]`` at logical position ``tok_pos[t]`` — against
@@ -156,14 +183,17 @@ def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
     Pallas kernel on TPU; gather-based jnp oracle on CPU (identical
     numerics)."""
     use_pallas = _default_use_pallas() if use_pallas is None else use_pallas
-    _record_dispatch("paged_packed_attention", use_pallas or interpret)
+    _record_dispatch(_kv_variant("paged_packed_attention", k_pages, k_scale),
+                     use_pallas or interpret)
     if use_pallas or interpret:
         from repro.kernels import paged_attention as _pa
         return _pa.paged_packed_attention(q, k_pages, v_pages, block_tables,
-                                          tok_slot, tok_pos,
+                                          tok_slot, tok_pos, k_scale=k_scale,
+                                          v_scale=v_scale,
                                           interpret=interpret)
     return _ref.paged_packed_attention_ref(q, k_pages, v_pages, block_tables,
-                                           tok_slot, tok_pos)
+                                           tok_slot, tok_pos, k_scale=k_scale,
+                                           v_scale=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "use_pallas",

@@ -18,6 +18,15 @@ index maps read the block table directly, so each grid step DMAs exactly
 one physical page into VMEM — no gathered (B, T*page) copy is ever
 materialised in HBM.
 
+Quantized KV pages: every paged kernel takes optional per-page-row
+``k_scale``/``v_scale`` pools ((P, page_size) fp32, shared across KV
+heads).  When present, the page's scale row rides the same block-table
+index map as its K/V page (one extra tiny DMA per page step) and the
+narrow-dtype page is dequantized at the existing ``.astype(f32)`` load —
+narrow in, fp32 softmax accumulate — so the online-softmax math is
+byte-identical to the unquantized path and only the storage rounding
+differs.  With scales absent the lowered program is unchanged.
+
 Grid: (B, Hkv, T) with T sequential (TPU grids execute in order); the G
 query heads sharing a kv head are processed together as a (G, D) tile —
 (C*G, D) for the chunked kernel — so the page matmuls hit the MXU.
@@ -41,8 +50,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale, page_size):
+def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, *rest,
+                  scale, page_size, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     it = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -59,6 +72,8 @@ def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
         k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        if quantized:
+            k = k * ks_ref[0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (G, page)
@@ -72,6 +87,8 @@ def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
         m_scr[...] = m_cur
         v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        if quantized:
+            v = v * vs_ref[0].astype(jnp.float32)[:, None]
         acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -87,31 +104,40 @@ def _paged_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
-                           scale=None, interpret=False):
+                           scale=None, k_scale=None, v_scale=None,
+                           interpret=False):
     """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D*);
-    block_tables: (B, T) int32; seq_lens: (B,) int32 -> (B, H, Dv)."""
+    block_tables: (B, T) int32; seq_lens: (B,) int32;
+    k_scale/v_scale: optional (P, page) fp32 dequant pools -> (B, H, Dv)."""
     B, H, D = q.shape
     page, Hkv = k_pages.shape[1], k_pages.shape[2]
     Dv = v_pages.shape[-1]
     G = H // Hkv
     T = block_tables.shape[1]
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scale is not None
 
     qg = q.reshape(B, Hkv, G, D)
     kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
     vt = v_pages.transpose(0, 2, 1, 3)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda b, h, t, bt, sl: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, page, D),
+                     lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
+        pl.BlockSpec((1, 1, page, Dv),
+                     lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page),
+                                  lambda b, h, t, bt, sl: (bt[b, t], 0))] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, T),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda b, h, t, bt, sl: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, D),
-                         lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, Dv),
-                         lambda b, h, t, bt, sl: (bt[b, t], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dv),
                                lambda b, h, t, bt, sl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -120,19 +146,24 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
             pltpu.VMEM((G, Dv), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_kernel, scale=scale, page_size=page)
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=page,
+                               quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
-      qg, kt, vt)
+      *operands)
     return out.reshape(B, H, Dv)
 
 
-def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
-                        m_scr, l_scr, acc_scr, *, scale, page_size, G):
+def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, *rest,
+                        scale, page_size, G, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     it = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -150,6 +181,8 @@ def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)               # (C*G, D)
         k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        if quantized:
+            k = k * ks_ref[0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (C*G, page)
@@ -170,6 +203,8 @@ def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
         m_scr[...] = m_cur
         v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        if quantized:
+            v = v * vs_ref[0].astype(jnp.float32)[:, None]
         acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -185,7 +220,8 @@ def _paged_chunk_kernel(bt_ref, pos_ref, nv_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
-                          scale=None, interpret=False):
+                          scale=None, k_scale=None, v_scale=None,
+                          interpret=False):
     """Chunked paged attention — per-lane rectangular (B, C) layout.
 
     Kept as the padded reference the packed serving kernel
@@ -206,6 +242,7 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
     G = H // Hkv
     T = block_tables.shape[1]
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scale is not None
 
     # (B, C, Hkv, G, D) -> (B, Hkv, C*G, D): one MXU tile per (lane, kv head)
     qg = q.reshape(B, C, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
@@ -213,17 +250,24 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
     kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
     vt = v_pages.transpose(0, 2, 1, 3)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, C * G, D),
+                     lambda b, h, t, bt, ps, nv: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, page, D),
+                     lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
+        pl.BlockSpec((1, 1, page, Dv),
+                     lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page),
+                                  lambda b, h, t, bt, ps, nv:
+                                  (bt[b, t], 0))] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, T),
-        in_specs=[
-            pl.BlockSpec((1, 1, C * G, D),
-                         lambda b, h, t, bt, ps, nv: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, D),
-                         lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, Dv),
-                         lambda b, h, t, bt, ps, nv: (bt[b, t], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, C * G, Dv),
                                lambda b, h, t, bt, ps, nv: (b, h, 0, 0)),
         scratch_shapes=[
@@ -233,20 +277,24 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, pos, n_valid, *,
         ],
     )
     kernel = functools.partial(_paged_chunk_kernel, scale=scale,
-                               page_size=page, G=G)
+                               page_size=page, G=G, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, C * G, Dv), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
-      n_valid.astype(jnp.int32), qg, kt, vt)
+      n_valid.astype(jnp.int32), *operands)
     return out.reshape(B, Hkv, C, G, Dv).transpose(0, 2, 1, 3, 4) \
         .reshape(B, C, H, Dv)
 
 
-def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *, scale, page_size):
+def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, *rest,
+                         scale, page_size, quantized=False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     t = pl.program_id(0)
     it = pl.program_id(2)
     nt = pl.num_programs(2)
@@ -263,6 +311,8 @@ def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, o_ref,
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
         k = k_ref[0, 0].astype(jnp.float32)               # (page, D)
+        if quantized:
+            k = k * ks_ref[0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (G, page)
@@ -276,6 +326,8 @@ def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
         m_scr[...] = m_cur
         v = v_ref[0, 0].astype(jnp.float32)               # (page, Dv)
+        if quantized:
+            v = v * vs_ref[0].astype(jnp.float32)[:, None]
         acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -292,7 +344,8 @@ def _paged_packed_kernel(bt_ref, sl_ref, ps_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
-                           tok_pos, *, scale=None, interpret=False):
+                           tok_pos, *, scale=None, k_scale=None,
+                           v_scale=None, interpret=False):
     """Packed ragged paged attention — the token-packed serving kernel.
 
     q: (T, H, D) — one flat buffer of query tokens where token t belongs
@@ -315,22 +368,30 @@ def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
     G = H // Hkv
     Tb = block_tables.shape[1]
     scale = D ** -0.5 if scale is None else scale
+    quantized = k_scale is not None
 
     qg = q.reshape(T, Hkv, G, D)
     kt = k_pages.transpose(0, 2, 1, 3)                # (P, Hkv, page, D)
     vt = v_pages.transpose(0, 2, 1, 3)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda t, h, j, bt, sl, ps: (t, h, 0, 0)),
+        pl.BlockSpec((1, 1, page, D),
+                     lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
+        pl.BlockSpec((1, 1, page, Dv),
+                     lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
+    ]
+    operands = [qg, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page),
+                                  lambda t, h, j, bt, sl, ps:
+                                  (bt[sl[t], j], 0))] * 2
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(T, Hkv, Tb),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda t, h, j, bt, sl, ps: (t, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, D),
-                         lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, Dv),
-                         lambda t, h, j, bt, sl, ps: (bt[sl[t], j], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dv),
                                lambda t, h, j, bt, sl, ps: (t, h, 0, 0)),
         scratch_shapes=[
@@ -340,14 +401,14 @@ def paged_packed_attention(q, k_pages, v_pages, block_tables, tok_slot,
         ],
     )
     kernel = functools.partial(_paged_packed_kernel, scale=scale,
-                               page_size=page)
+                               page_size=page, quantized=quantized)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, Hkv, G, Dv), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), tok_slot.astype(jnp.int32),
-      tok_pos.astype(jnp.int32), qg, kt, vt)
+      tok_pos.astype(jnp.int32), *operands)
     return out.reshape(T, H, Dv)
 
 

@@ -1,9 +1,28 @@
 """Pure-jnp oracles for the Pallas kernels (used by tests + interpret-mode
-validation sweeps)."""
+validation sweeps).
+
+The paged oracles take optional per-page-row ``k_scale``/``v_scale`` pools
+((P, page_size) fp32, shared across KV heads — the quantized-KV page
+format): when present, gathered K/V rows are dequantized as
+``row.astype(f32) * scale`` right where the unquantized path upcasts, so
+the fp32 softmax math downstream is IDENTICAL and the only difference is
+the storage rounding."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def _dequant(rows, scale_pages, block_tables):
+    """rows: gathered K/V (..., Sk, Hkv, D) already fp32; scale_pages:
+    (P, page_size) fp32 per-row scales or None; block_tables matches the
+    gather that produced ``rows``.  Returns rows * scale (broadcast over
+    heads and head dim)."""
+    if scale_pages is None:
+        return rows
+    s = scale_pages[block_tables]                 # (..., T, page)
+    s = s.reshape(s.shape[:-2] + (-1,))           # (..., Sk)
+    return rows * s[..., None, None].astype(jnp.float32)
 
 
 def attention_ref(q, k, v, *, causal=True, scale=None):
@@ -24,13 +43,14 @@ def attention_ref(q, k, v, *, causal=True, scale=None):
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
-                        scale=None):
+                        scale=None, k_scale=None, v_scale=None):
     """Paged-KV decode attention oracle (gather-based).
 
     q: (B, H, D) one query token per request;
     k_pages/v_pages: (P, page_size, Hkv, D*) pools;
     block_tables: (B, T) int32 logical-block -> physical-page;
-    seq_lens: (B,) valid keys per request (gathered index < seq_len).
+    seq_lens: (B,) valid keys per request (gathered index < seq_len);
+    k_scale/v_scale: optional (P, page_size) fp32 dequant scale pools.
     Returns (B, H, Dv).
     """
     B, H, D = q.shape
@@ -38,8 +58,11 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
     G = H // Hkv
     scale = D ** -0.5 if scale is None else scale
     k = k_pages[block_tables]                     # (B, T, page, Hkv, D)
-    k = k.reshape(B, -1, Hkv, D)
-    v = v_pages[block_tables].reshape(B, -1, Hkv, v_pages.shape[-1])
+    k = _dequant(k.reshape(B, -1, Hkv, D).astype(jnp.float32),
+                 k_scale, block_tables)
+    v = _dequant(v_pages[block_tables].reshape(
+        B, -1, Hkv, v_pages.shape[-1]).astype(jnp.float32),
+        v_scale, block_tables)
     qg = q.reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
@@ -51,7 +74,8 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
 
 
 def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, pos,
-                              n_valid, *, scale=None):
+                              n_valid, *, scale=None, k_scale=None,
+                              v_scale=None):
     """Chunked paged-attention oracle (gather-based): C >= 1 query tokens per
     lane against block-table pages, causal within the chunk.
 
@@ -74,8 +98,10 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, pos,
     G = H // Hkv
     Dv = v_pages.shape[-1]
     scale = D ** -0.5 if scale is None else scale
-    k = k_pages[block_tables].reshape(B, -1, Hkv, D)
-    v = v_pages[block_tables].reshape(B, -1, Hkv, Dv)
+    k = _dequant(k_pages[block_tables].reshape(
+        B, -1, Hkv, D).astype(jnp.float32), k_scale, block_tables)
+    v = _dequant(v_pages[block_tables].reshape(
+        B, -1, Hkv, Dv).astype(jnp.float32), v_scale, block_tables)
     qg = q.reshape(B, C, Hkv, G, D)
     s = jnp.einsum("bchgd,bkhd->bhgck", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
@@ -91,7 +117,8 @@ def paged_chunk_attention_ref(q, k_pages, v_pages, block_tables, pos,
 
 
 def paged_packed_attention_ref(q, k_pages, v_pages, block_tables, tok_slot,
-                               tok_pos, *, scale=None):
+                               tok_pos, *, scale=None, k_scale=None,
+                               v_scale=None):
     """Packed ragged paged-attention oracle (gather-based): a flat (T,)
     token buffer where token t belongs to lane ``tok_slot[t]`` at logical
     position ``tok_pos[t]`` — the segment-aware generalisation of
@@ -124,8 +151,10 @@ def paged_packed_attention_ref(q, k_pages, v_pages, block_tables, tok_slot,
     Dv = v_pages.shape[-1]
     scale = D ** -0.5 if scale is None else scale
     bt = block_tables[tok_slot]                    # (T, Tb) per-token tables
-    k = k_pages[bt].reshape(T, -1, Hkv, D)         # (T, Sk, Hkv, D)
-    v = v_pages[bt].reshape(T, -1, Hkv, Dv)
+    k = _dequant(k_pages[bt].reshape(
+        T, -1, Hkv, D).astype(jnp.float32), k_scale, bt)   # (T, Sk, Hkv, D)
+    v = _dequant(v_pages[bt].reshape(
+        T, -1, Hkv, Dv).astype(jnp.float32), v_scale, bt)
     qg = q.reshape(T, Hkv, G, D)
     s = jnp.einsum("thgd,tkhd->thgk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale

@@ -153,6 +153,17 @@ def paged_gather(pages, block_tables):
     return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
 
 
+def _gather_dequant(pages, scale_pages, block_tables):
+    """Gather a K/V pool to (B, Sk, Hkv, D) and, when a per-page-row scale
+    pool rides along (quantized KV), dequantize to fp32 — the masked-gather
+    fallback's mirror of the kernels' in-VMEM dequant."""
+    g = paged_gather(pages, block_tables)
+    if scale_pages is None:
+        return g
+    s = paged_gather(scale_pages, block_tables)                   # (B, Sk)
+    return g.astype(jnp.float32) * s[..., None, None]
+
+
 def chunk_attention(q, k, v, q_pos, *, window=0, cap=0.0, scale=None):
     """Multi-token attention against a gathered cache with per-request
     positions (chunked prefill / paged decode).
@@ -179,26 +190,79 @@ def chunk_attention(q, k, v, q_pos, *, window=0, cap=0.0, scale=None):
     return o.reshape(B, C, H, v.shape[-1])
 
 
-def gqa_init_paged_cache(cfg, num_pages, page_size, dtype):
+#: quantized KV page storage dtypes (``EngineConfig.kv_dtype`` values);
+#: "" keeps the engine's ``cache_dtype`` pools (bit-preserved legacy path)
+KV_DTYPES = ("", "bf16", "int8", "fp8")
+_KV_STORAGE = {"bf16": "bfloat16", "int8": "int8", "fp8": "float8_e4m3fn"}
+
+
+def _kv_qmax(pages_dtype) -> float:
+    return 448.0 if jnp.dtype(pages_dtype).name.startswith("float8") else 127.0
+
+
+def _quant_rows(vals, pages_dtype):
+    """Per-token-row KV quantization: vals (..., Hkv, Dh) -> (q, scale)
+    with ``scale = amax / qmax`` reduced over (Hkv, Dh) — ONE fp32 scale
+    per cached token row, shared across KV heads.  History-free by
+    construction (a row's scale depends only on that row's values), so
+    re-scattering a position is idempotent and a COW'd page is
+    bit-identical to its source — the properties the prefix-cache and
+    spec-rollback identity tests pin.  ``q`` is returned in fp32 units of
+    the narrow grid (int grids pre-rounded and clipped); the page
+    scatter's ``astype(pages.dtype)`` performs the final cast."""
+    qmax = _kv_qmax(pages_dtype)
+    a = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=(-2, -1))
+    scale = jnp.maximum(a / qmax, 1e-8)
+    q = vals.astype(jnp.float32) / scale[..., None, None]
+    if not jnp.dtype(pages_dtype).name.startswith("float8"):
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q, scale
+
+
+def gqa_init_paged_cache(cfg, num_pages, page_size, dtype, kv_dtype=""):
+    """K/V page pools (P, page, Hkv, Dh).  ``kv_dtype`` selects the
+    quantized page format: "" stores in ``dtype`` (the engine's
+    ``cache_dtype`` — existing path, bit-preserved); "bf16" stores
+    bfloat16 with no scales; "int8"/"fp8" store the narrow dtype plus
+    per-page-row (P, page) fp32 ``k_scale``/``v_scale`` pools shared
+    across KV heads — 2 bytes/elt -> 1 byte/elt + 4 bytes/row."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
     Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
-    return {
-        "k": jnp.zeros((num_pages, page_size, Hkv, Dh), jnp.dtype(dtype)),
-        "v": jnp.zeros((num_pages, page_size, Hkv, Dh), jnp.dtype(dtype)),
+    store = jnp.dtype(_KV_STORAGE.get(kv_dtype, dtype))
+    cache = {
+        "k": jnp.zeros((num_pages, page_size, Hkv, Dh), store),
+        "v": jnp.zeros((num_pages, page_size, Hkv, Dh), store),
     }
+    if kv_dtype in ("int8", "fp8"):
+        cache["k_scale"] = jnp.ones((num_pages, page_size), jnp.float32)
+        cache["v_scale"] = jnp.ones((num_pages, page_size), jnp.float32)
+    return cache
 
 
 def _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables, pos, n_valid):
     """Shared prologue of the sequential and dual-branch paged paths:
     project q/k/v at the chunk's positions and scatter k/v into the page
-    pools.  Returns (q, kc, vc, positions) — ONE implementation so the two
-    paths cannot drift apart (they are asserted bit-identical)."""
+    pools (quantizing per token row first when the cache carries
+    ``k_scale``/``v_scale`` pools).  Returns (q, new_cache, positions) —
+    ONE implementation so the two paths cannot drift apart (they are
+    asserted bit-identical)."""
     C = x.shape[1]
     page = cache["k"].shape[1]
     positions = pos[:, None] + jnp.arange(C)[None]
     q, k, v = gqa_qkv(p, cfg, x, positions)
-    kc = paged_scatter(cache["k"], k, block_tables, pos, n_valid, page)
-    vc = paged_scatter(cache["v"], v, block_tables, pos, n_valid, page)
-    return q, kc, vc, positions
+    nc = {}
+    if "k_scale" in cache:
+        k, ks = _quant_rows(k, cache["k"].dtype)
+        v, vs = _quant_rows(v, cache["v"].dtype)
+        nc["k_scale"] = paged_scatter(cache["k_scale"], ks, block_tables,
+                                      pos, n_valid, page)
+        nc["v_scale"] = paged_scatter(cache["v_scale"], vs, block_tables,
+                                      pos, n_valid, page)
+    nc["k"] = paged_scatter(cache["k"], k, block_tables, pos, n_valid, page)
+    nc["v"] = paged_scatter(cache["v"], v, block_tables, pos, n_valid, page)
+    return q, nc, positions
 
 
 def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
@@ -209,25 +273,32 @@ def gqa_paged_apply(p, cfg, x, cache, block_tables, pos, n_valid, *,
     decoding lanes advance 1 in the same dispatch).  Returns
     (out (B,C,D), new_cache)."""
     B, C = x.shape[:2]
-    q, kc, vc, positions = _gqa_paged_qkv_scatter(p, cfg, x, cache,
-                                                  block_tables, pos, n_valid)
+    q, nc, positions = _gqa_paged_qkv_scatter(p, cfg, x, cache,
+                                              block_tables, pos, n_valid)
+    kc, vc = nc["k"], nc["v"]
+    ks, vs = nc.get("k_scale"), nc.get("v_scale")
     if cfg.attn_softcap == 0.0 and isinstance(window, int) and window == 0:
         # full-attention tick: the block-table kernel paths (Pallas on TPU,
         # gather-based ref on CPU) — the TPU kernels DMA pages directly so
-        # no gathered (B, T*page) copy is ever materialised in HBM
+        # no gathered (B, T*page) copy is ever materialised in HBM; scale
+        # pools (quantized KV) ride the same block tables and dequantize
+        # inside the kernel's VMEM load
         from repro.kernels import ops
         if C == 1:
             o = ops.paged_decode_attention(q[:, 0], kc, vc, block_tables,
-                                           pos + 1)[:, None]
+                                           pos + 1, k_scale=ks,
+                                           v_scale=vs)[:, None]
         else:
             o = ops.paged_chunk_attention(q, kc, vc, block_tables, pos,
-                                          n_valid)
+                                          n_valid, k_scale=ks, v_scale=vs)
     else:
         # sliding-window / softcapped layers (gemma2): masked gather path
-        o = chunk_attention(q, paged_gather(kc, block_tables),
-                            paged_gather(vc, block_tables), positions,
+        o = chunk_attention(q, _gather_dequant(kc, ks, block_tables),
+                            _gather_dequant(vc, vs, block_tables), positions,
                             window=window, cap=cfg.attn_softcap)
-    return o.reshape(B, C, -1) @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}
+        if ks is not None:
+            o = o.astype(x.dtype)
+    return o.reshape(B, C, -1) @ p["wo"].astype(x.dtype), nc
 
 
 def gqa_paged_dual(p, ffn, cfg, x, mlp_in, cache, block_tables, pos,
@@ -244,13 +315,24 @@ def gqa_paged_dual(p, ffn, cfg, x, mlp_in, cache, block_tables, pos,
     Returns (attn_out (B,1,D), ffn_out (B,1,D), new_cache).
     """
     B, C = x.shape[:2]
-    q, kc, vc, _ = _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables,
-                                          pos, n_valid)
+    q, nc, _ = _gqa_paged_qkv_scatter(p, cfg, x, cache, block_tables,
+                                      pos, n_valid)
     from repro.kernels import ops
-    o, y = ops.dual_branch_decode(q[:, 0], kc, vc, block_tables, pos + 1,
-                                  mlp_in, ffn, kind=cfg.mlp)
+    if "k_scale" in nc:
+        # quantized KV: the fused dual-branch kernel has no dequant path,
+        # so issue the two branches as independent ops (XLA still overlaps
+        # them) — the scale-aware paged kernel + the dense MLP
+        o = ops.paged_decode_attention(q[:, 0], nc["k"], nc["v"],
+                                       block_tables, pos + 1,
+                                       k_scale=nc["k_scale"],
+                                       v_scale=nc["v_scale"])
+        y = L.mlp_apply(ffn, mlp_in, cfg.mlp)
+    else:
+        o, y = ops.dual_branch_decode(q[:, 0], nc["k"], nc["v"],
+                                      block_tables, pos + 1, mlp_in, ffn,
+                                      kind=cfg.mlp)
     a = o[:, None].reshape(B, C, -1) @ p["wo"].astype(x.dtype)
-    return a, y, {"k": kc, "v": vc}
+    return a, y, nc
 
 
 def gqa_packed_apply(p, cfg, x, cache, block_tables, tok_slot, tok_pos, *,
@@ -267,24 +349,39 @@ def gqa_packed_apply(p, cfg, x, cache, block_tables, tok_slot, tok_pos, *,
     page = cache["k"].shape[1]
     positions = jnp.maximum(tok_pos, 0)[None]                     # (1, T)
     q, k, v = gqa_qkv(p, cfg, x, positions)                       # (1,T,H,Dh)
-    kc = packed_scatter(cache["k"], k[0], block_tables, tok_slot, tok_pos,
-                        page)
-    vc = packed_scatter(cache["v"], v[0], block_tables, tok_slot, tok_pos,
-                        page)
+    k, v = k[0], v[0]
+    nc = {}
+    if "k_scale" in cache:
+        k, ks_rows = _quant_rows(k, cache["k"].dtype)
+        v, vs_rows = _quant_rows(v, cache["v"].dtype)
+        nc["k_scale"] = packed_scatter(cache["k_scale"], ks_rows,
+                                       block_tables, tok_slot, tok_pos, page)
+        nc["v_scale"] = packed_scatter(cache["v_scale"], vs_rows,
+                                       block_tables, tok_slot, tok_pos, page)
+    nc["k"] = packed_scatter(cache["k"], k, block_tables, tok_slot, tok_pos,
+                             page)
+    nc["v"] = packed_scatter(cache["v"], v, block_tables, tok_slot, tok_pos,
+                             page)
+    kc, vc = nc["k"], nc["v"]
+    ks, vs = nc.get("k_scale"), nc.get("v_scale")
     if cfg.attn_softcap == 0.0 and isinstance(window, int) and window == 0:
         # full-attention tick: the segment-aware block-table kernel (Pallas
-        # on TPU DMAs each token's OWN pages; gather-based ref on CPU)
+        # on TPU DMAs each token's OWN pages; gather-based ref on CPU);
+        # quantized pages dequantize in-kernel via the scale pools
         from repro.kernels import ops
         o = ops.paged_packed_attention(q[0], kc, vc, block_tables,
-                                       tok_slot, tok_pos)[None]
+                                       tok_slot, tok_pos, k_scale=ks,
+                                       v_scale=vs)[None]
     else:
         # sliding-window / softcapped layers (gemma2): per-token masked
         # gather — each token indexes its own slot's gathered sequence
-        kg = paged_gather(kc, block_tables)[tok_slot]             # (T,Sk,..)
-        vg = paged_gather(vc, block_tables)[tok_slot]
+        kg = _gather_dequant(kc, ks, block_tables)[tok_slot]      # (T,Sk,..)
+        vg = _gather_dequant(vc, vs, block_tables)[tok_slot]
         o = chunk_attention(q[0][:, None], kg, vg, tok_pos[:, None],
                             window=window, cap=cfg.attn_softcap)[:, 0][None]
-    return o.reshape(B, T, -1) @ p["wo"].astype(x.dtype), {"k": kc, "v": vc}
+        if ks is not None:
+            o = o.astype(x.dtype)
+    return o.reshape(B, T, -1) @ p["wo"].astype(x.dtype), nc
 
 
 # ------------------------------------------------------------------------- #

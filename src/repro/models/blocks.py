@@ -22,6 +22,7 @@ from repro.core.plan import ExecutionPlan, Phase
 from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import moe as M
+from repro.optim import grad_compress as GC
 
 
 def block_init(key, cfg, *, kind="dense", cross=False, is_block0=False):
@@ -52,10 +53,20 @@ def block_init(key, cfg, *, kind="dense", cross=False, is_block0=False):
     return p
 
 
-def _assemble(partial, axis):
+def _assemble(partial, axis, compress="none"):
     """All-reduce a TP partial sum over ``axis``; identity when replicated.
-    tp_size = 1 is the degenerate psum — one code path, not two."""
-    return jax.lax.psum(partial, axis) if axis is not None else partial
+    tp_size = 1 is the degenerate psum — one code path, not two.
+
+    ``compress`` (``plan.grad_compress``) selects the BACKWARD collective:
+    'none' is a plain psum (its transpose — the TP gradient all-reduce —
+    stays exact fp32, byte-identical HLO to before the knob existed);
+    'int8'/'lowrank' route the cotangent through
+    ``optim.grad_compress.compressed_psum`` — forward still exact."""
+    if axis is None:
+        return partial
+    if compress != "none":
+        return GC.compressed_psum(partial, axis, compress)
+    return jax.lax.psum(partial, axis)
 
 
 def _ffn_apply(p, cfg, h, kind, plan: ExecutionPlan):
@@ -174,9 +185,10 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
         else:
             mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
         y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
-        return x + _assemble(a + y, axis), a, aux, new_cache
+        return (x + _assemble(a + y, axis, plan.grad_compress),
+                a, aux, new_cache)
 
-    a = _assemble(a, axis)
+    a = _assemble(a, axis, plan.grad_compress)
     if cfg.post_norms:
         a = L.norm_apply(p["post_attn"], a, cfg.norm)
 
@@ -186,7 +198,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
         cx = _assemble(
             A.gqa_cross_apply(p["xattn"], cfg,
                               L.norm_apply(p["ln_x"], resid, cfg.norm),
-                              enc_out), axis)
+                              enc_out), axis, plan.grad_compress)
         resid = resid + cx
         x = x + cx  # the FAL mlp_input uses x without self-attn but with cross
 
@@ -196,7 +208,7 @@ def block_apply(p, cfg, x, a1_sig, positions, window, *, kind="dense",
         mlp_in = fal.mlp_input(cfg, p, x, a, a1_sig)
 
     y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
-    y = _assemble(y, axis)
+    y = _assemble(y, axis, plan.grad_compress)
     if cfg.post_norms:
         y = L.norm_apply(p["post_ffn"], y, cfg.norm)
     return resid + y, a, aux, new_cache
@@ -272,7 +284,8 @@ def _block_apply_dual(p, cfg, x, a1_sig, window, *, kind,
         y, aux = _ffn_apply(p, cfg, mlp_in, kind, plan)
     if axis is not None:
         # one fused collective per block, same as the sequential fused path
-        return x + _assemble(a + y, axis), a, aux, new_cache
+        return (x + _assemble(a + y, axis, plan.grad_compress),
+                a, aux, new_cache)
     # replicated: keep the sequential path's (x + a) + y association so
     # dual-branch logits are bit-identical, not merely close
     return (x + a) + y, a, aux, new_cache
@@ -315,6 +328,11 @@ def _block_apply_sp(p, cfg, x_s, a1_sig, positions, window, *, kind,
         return jax.lax.all_gather(v, axis, axis=1, tiled=True)
 
     def scatter(v):
+        # plan.grad_compress routes the BACKWARD all-gather (the transpose
+        # of this reduce-scatter) through the compressed exchange; 'none'
+        # lowers the plain collective, byte-identical to before
+        if plan.grad_compress != "none":
+            return GC.compressed_psum_scatter(v, axis, plan.grad_compress)
         return jax.lax.psum_scatter(v, axis, scatter_dimension=1, tiled=True)
 
     def local_slice(full):
@@ -343,7 +361,7 @@ def _block_apply_sp(p, cfg, x_s, a1_sig, positions, window, *, kind,
     if full_export:
         # block 0's signal export: fully assemble (and post-norm) the
         # attention so every device holds the replicated a1_raw
-        a = _assemble(a, axis)
+        a = _assemble(a, axis, plan.grad_compress)
         if cfg.post_norms:
             a = L.norm_apply(p["post_attn"], a, cfg.norm)
         resid_s = x_s + local_slice(a)

@@ -360,9 +360,17 @@ def _decoder_decode(p, cfg, batch, cache, plan: ExecutionPlan):
 # ------------------------------------------------------------------------- #
 # paged decode (serving engine): block-table KV cache, chunked ticks
 # ------------------------------------------------------------------------- #
-def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype):
-    mk = (A.mla_init_paged_cache if cfg.use_mla else A.gqa_init_paged_cache)
-    c0 = mk(cfg, num_pages, page_size, dtype)
+def _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype,
+                              kv_dtype=""):
+    if cfg.use_mla:
+        if kv_dtype:
+            raise NotImplementedError(
+                "quantized KV pages (kv_dtype) are GQA-only: the MLA cache "
+                "stores latents, not per-head K/V rows")
+        c0 = A.mla_init_paged_cache(cfg, num_pages, page_size, dtype)
+    else:
+        c0 = A.gqa_init_paged_cache(cfg, num_pages, page_size, dtype,
+                                    kv_dtype=kv_dtype)
     rest = cfg.n_layers - 1
     stacked = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (rest,) + a.shape), c0)
@@ -946,18 +954,26 @@ def decode_step(params, cfg, batch, cache, plan=None):
 PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
-def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16"):
+def init_paged_cache(cfg, num_pages, page_size, slots, dtype="bfloat16",
+                     kv_dtype=""):
     """Paged-KV cache for the decoder family: (num_pages, page_size, ...)
     pools per layer + a per-slot FAL-signal buffer.  Page 0 is scratch
     (see attention.paged_scatter).  Slots are phase-independent — each
     lane's position/advance rides in per-lane ``pos``/``n_valid`` vectors,
     so one cache serves mixed prefill/decode ticks; the per-slot ``a1_sig``
     buffer is refreshed by block 0 at each lane's own last valid position
-    (held for lanes sitting a tick out)."""
+    (held for lanes sitting a tick out).
+
+    ``kv_dtype`` selects the quantized KV page format ("" | "bf16" |
+    "int8" | "fp8" — see ``attention.gqa_init_paged_cache``): int8/fp8
+    pools carry per-page-row fp32 ``k_scale``/``v_scale`` pools that ride
+    every downstream tree_map (stacked-layer broadcast, COW page copies,
+    the spec-decode draft cache) with no further plumbing."""
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"paged KV cache: decoder family only, got {cfg.family}")
-    return _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype)
+    return _decoder_init_paged_cache(cfg, num_pages, page_size, slots, dtype,
+                                     kv_dtype=kv_dtype)
 
 
 def paged_decode_step(params, cfg, batch, cache, plan=None, want="logits"):

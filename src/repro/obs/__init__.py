@@ -61,6 +61,7 @@ engine_spec_rejected_total              counter    tokens   serve/scheduler.py  
 engine_spec_accepted_len                histogram  tokens   serve/scheduler.py  PagedEngine._consume_spec_lane
 pages_in_use                            gauge      pages    serve/paged_cache.py PageAllocator
 pages_shared                            gauge      pages    serve/paged_cache.py PageAllocator
+engine_kv_bytes_in_use                  gauge      bytes    serve/paged_cache.py PageAllocator
 pages_alloc_total                       counter    pages    serve/paged_cache.py PageAllocator.alloc
 pages_free_total                        counter    pages    serve/paged_cache.py PageAllocator.free
 pages_shared_total                      counter    pages    serve/paged_cache.py PageAllocator.share
@@ -74,6 +75,7 @@ batcher_ticks_total                     counter    ticks    serve/decode.py     
 batcher_dispatches_total                counter    calls    serve/decode.py     ContinuousBatcher.step
 batcher_occupancy                       histogram  ratio    serve/decode.py     ContinuousBatcher.step
 kernel_dispatch_total.<site>.<path>     counter    traces   kernels/ops.py      every dispatcher
+kernel_dispatch_total.<site>.<kv>.<path> counter   traces   kernels/ops.py      paged dispatchers, quantized KV (<kv> = int8|fp8)
 train_steps_total                       counter    steps    train/trainer.py    train()
 train_tokens_total                      counter    tokens   train/trainer.py    train()
 train_step_ms                           histogram  ms       train/trainer.py    train()

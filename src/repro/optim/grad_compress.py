@@ -1,4 +1,6 @@
-"""Lossy gradient-compression baselines from the paper's Fig 7 comparison:
+"""Lossy gradient-compression baselines from the paper's Fig 7 comparison,
+plus the compressed-collective hooks the explicit-TP stack routes its
+gradient reductions through (``ExecutionPlan.grad_compress``).
 
 * Grad-Q  [QSGD, ref 36]: per-tensor stochastic-free int8 quantisation of the
   gradients (quantise -> dequantise models the communication payload).
@@ -8,11 +10,43 @@
 Both are *lossy* — the paper's point is that FAL removes communication
 structurally, without touching gradient fidelity.  bench_comm.py compares
 the quality hit.
+
+Compressed collectives
+======================
+
+``compressed_psum`` / ``compressed_psum_scatter`` are ``custom_vjp``
+wrappers around the explicit-TP collectives in ``models/blocks.py``.  The
+FORWARD collective stays exact (serving and eval numerics are untouched);
+only the BACKWARD cotangent reduction — the TP *gradient* all-reduce that
+JAX emits as the transpose of each forward psum — is rerouted through a
+compressed exchange:
+
+* ``int8``   — two-phase QSGD all-reduce: the cotangent is split into tp
+  row chunks, each chunk int8-quantised against its own fp32 amax scale and
+  exchanged via ``all_to_all`` (the reduce-scatter phase), the locally
+  summed shard re-quantised and ``all_gather``-ed back.  Wire payload is
+  ~2n int8 bytes per device vs ~8n·(tp-1)/tp for the fp32 ring all-reduce
+  (~4x fewer gradient bytes; ``bench_comm --json`` measures it off lowered
+  HLO as ``grad_payload_bytes``).
+* ``lowrank`` — PowerSGD: the (B, S, D) cotangent is reshaped to (B·S, D)
+  and the *summed* gradient approximated as Q(QᵀΣg) with two rank-r
+  all-reduces ((m, r) and (r, D)) instead of one (m, D) — one power
+  iteration against a fixed random projection, matching ``lowrank`` above.
+
+``method='none'`` never reaches these wrappers: ``blocks._assemble`` calls
+``jax.lax.psum`` directly, so the default path lowers to byte-identical
+HLO.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+
+GRAD_COMPRESS_METHODS = ("none", "int8", "lowrank")
+
+_LOWRANK_RANK = 4
 
 
 def quantize_int8(tree):
@@ -35,18 +69,167 @@ def lowrank(tree, rank=4, seed=0):
     return jax.tree.map(lr, tree)
 
 
-def compressed_bytes(tree, method):
-    """Communication payload estimate for the bench."""
+def compressed_bytes(tree, method, rank=4):
+    """Communication payload estimate for the bench.
+
+    Bytes follow each tensor's OWN dtype (``g.dtype.itemsize``), not an
+    assumed 4; ``lowrank`` bills the factored (m + n)·r payload only for
+    the 2-D matrices ``lowrank()`` actually compresses — tensors it skips
+    (``ndim != 2`` or ``min(shape) <= rank``) ship uncompressed and are
+    billed as such."""
     total = 0
     for g in jax.tree.leaves(tree):
+        itemsize = jnp.dtype(g.dtype).itemsize
         if method == "none":
-            total += g.size * 4
+            total += g.size * itemsize
         elif method == "int8":
-            total += g.size * 1 + 4
+            total += g.size * 1 + 4          # int8 payload + one fp32 scale
         elif method == "lowrank":
-            if g.ndim == 2:
-                r = 4
-                total += (g.shape[0] + g.shape[1]) * r * 4
+            if g.ndim == 2 and min(g.shape) > rank:
+                total += (g.shape[0] + g.shape[1]) * rank * itemsize
             else:
-                total += g.size * 4
+                total += g.size * itemsize   # lowrank() skips -> ships raw
     return total
+
+
+# --------------------------------------------------------------------------- #
+# compressed backward collectives (ExecutionPlan.grad_compress)
+# --------------------------------------------------------------------------- #
+def _int8_allreduce(ct, axis):
+    """Two-phase QSGD all-reduce of a cotangent over mesh axis ``axis``:
+    per-chunk int8 quantise -> all_to_all (reduce-scatter phase) -> local
+    dequant + sum -> re-quantise the reduced shard -> int8 all_gather.
+    Output is replicated, like ``jax.lax.psum``."""
+    tp = jax.lax.psum(1, axis)               # static axis size
+    flat = ct.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % tp
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(tp, -1)            # chunk j -> device j
+    a = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) + 1e-12
+    q8 = jnp.clip(jnp.round(chunks / a * 127), -127, 127).astype(jnp.int8)
+    q8x = jax.lax.all_to_all(q8, axis, split_axis=0, concat_axis=0)
+    ax = jax.lax.all_to_all(a, axis, split_axis=0, concat_axis=0)
+    shard = jnp.sum(q8x.astype(ct.dtype) * (ax / 127), axis=0)  # (n/tp,)
+    a2 = jnp.max(jnp.abs(shard)) + 1e-12
+    q2 = jnp.clip(jnp.round(shard / a2 * 127), -127, 127).astype(jnp.int8)
+    g8 = jax.lax.all_gather(q2, axis)        # (tp, n/tp) int8
+    ga = jax.lax.all_gather(a2, axis)        # (tp,) fp32-ish
+    out = (g8.astype(ct.dtype) * (ga[:, None] / 127)).reshape(-1)
+    if pad:
+        out = out[:n]
+    return out.reshape(ct.shape)
+
+
+def _lowrank_allreduce(ct, axis):
+    """PowerSGD all-reduce: approximate the SUMMED cotangent as Q(QᵀΣg)
+    with two rank-r all-reduces instead of one full-size one.  Falls back
+    to the exact psum when the cotangent has no compressible 2-D shape."""
+    r = _LOWRANK_RANK
+    d = ct.shape[-1]
+    m = ct.size // d
+    if ct.ndim < 2 or min(m, d) <= r:
+        return jax.lax.psum(ct, axis)
+    g = ct.reshape(m, d)
+    key = jax.random.PRNGKey(m * 131 + d)    # fixed projection, like lowrank()
+    omega = jax.random.normal(key, (d, r), g.dtype)
+    p = jax.lax.psum(g @ omega, axis)        # (m, r) — rank-r payload 1
+    q, _ = jnp.linalg.qr(p)
+    qtg = jax.lax.psum(q.T @ g, axis)        # (r, d) — rank-r payload 2
+    return (q @ qtg).reshape(ct.shape)
+
+
+def _compressed_allreduce(ct, axis, method):
+    if method == "int8":
+        return _int8_allreduce(ct, axis)
+    if method == "lowrank":
+        return _lowrank_allreduce(ct, axis)
+    return jax.lax.psum(ct, axis)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def compressed_psum(x, axis, method):
+    """``jax.lax.psum`` with a compressed BACKWARD collective: the forward
+    all-reduce is exact; the cotangent reduction (the TP gradient
+    all-reduce) runs ``method`` ∈ {'int8', 'lowrank'}.  Call sites use
+    plain ``psum`` for method 'none' (byte-identical HLO)."""
+    return jax.lax.psum(x, axis)
+
+
+def _cpsum_fwd(x, axis, method):
+    return jax.lax.psum(x, axis), None
+
+
+def _cpsum_bwd(axis, method, _, ct):
+    return (_compressed_allreduce(ct, axis, method),)
+
+
+compressed_psum.defvjp(_cpsum_fwd, _cpsum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def compressed_psum_scatter(x, axis, method):
+    """Sequence-parallel ``psum_scatter`` (dimension 1, tiled — the SP
+    blocks' layout) with a compressed BACKWARD all-gather: the cotangent
+    shard is int8-quantised (or rank-r factored) before the gather that
+    transposes the forward reduce-scatter."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=1, tiled=True)
+
+
+def _cscatter_fwd(x, axis, method):
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=1,
+                                tiled=True), None
+
+
+def _int8_allgather(ct, axis):
+    """int8 all-gather along dim 1 (tiled): quantise the local shard, ship
+    int8 + one fp32 scale per device, dequantise after the gather."""
+    a = jnp.max(jnp.abs(ct)) + 1e-12
+    q8 = jnp.clip(jnp.round(ct / a * 127), -127, 127).astype(jnp.int8)
+    g8 = jax.lax.all_gather(q8, axis, axis=1, tiled=True)
+    ga = jax.lax.all_gather(a, axis)                   # (tp,)
+    tp = ga.shape[0]
+    shard = ct.shape[1]
+    # scale stripe j covers the tiled gather's rows [j*shard, (j+1)*shard)
+    scale = jnp.repeat(ga / 127, shard)
+    shape = (1,) * 1 + (tp * shard,) + (1,) * (ct.ndim - 2)
+    return g8.astype(ct.dtype) * scale.reshape(shape)
+
+
+def _lowrank_allgather(ct, axis):
+    """Rank-r all-gather: each device ships its shard's (m, r) + (r, d)
+    PowerSGD factors; every device reconstructs all shards and re-tiles
+    them along dim 1.  Exact gather when the shard is not compressible."""
+    r = _LOWRANK_RANK
+    d = ct.shape[-1]
+    m = ct.size // d
+    if ct.ndim < 2 or min(m, d) <= r:
+        return jax.lax.all_gather(ct, axis, axis=1, tiled=True)
+    g = ct.reshape(m, d)
+    key = jax.random.PRNGKey(m * 131 + d)
+    omega = jax.random.normal(key, (d, r), g.dtype)
+    q, _ = jnp.linalg.qr(g @ omega)
+    qtg = q.T @ g
+    gq = jax.lax.all_gather(q, axis)                   # (tp, m, r)
+    gt = jax.lax.all_gather(qtg, axis)                 # (tp, r, d)
+    full = jnp.einsum("tmr,trd->tmd", gq, gt)          # (tp, m, d)
+    tp = gq.shape[0]
+    shard_shape = ct.shape
+    out = full.reshape((tp,) + shard_shape)
+    # stack of per-device shards -> tiled layout along dim 1
+    perm = (1, 0) + tuple(range(2, out.ndim))
+    out = out.transpose(perm)
+    return out.reshape(shard_shape[:1] + (tp * shard_shape[1],)
+                       + shard_shape[2:])
+
+
+def _cscatter_bwd(axis, method, _, ct):
+    if method == "int8":
+        return (_int8_allgather(ct, axis),)
+    if method == "lowrank":
+        return (_lowrank_allgather(ct, axis),)
+    return (jax.lax.all_gather(ct, axis, axis=1, tiled=True),)
+
+
+compressed_psum_scatter.defvjp(_cscatter_fwd, _cscatter_bwd)

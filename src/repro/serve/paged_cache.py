@@ -47,10 +47,16 @@ class PageAllocator:
     ``_free`` and ``_ref`` are private — all consumers go through
     alloc/share/free (CI greps for direct access)."""
 
-    def __init__(self, num_pages: int, page_size: int, metrics=None):
+    def __init__(self, num_pages: int, page_size: int, metrics=None,
+                 page_bytes: int = 0):
         assert num_pages >= 2, "need >= 1 allocatable page + scratch page 0"
         self.num_pages = num_pages
         self.page_size = page_size
+        # HBM bytes one page costs across every layer's pools (quantized
+        # engines: narrow K/V pages + fp32 scale rows); 0 = unknown.
+        # Turns page pressure into byte pressure so capacity comparisons
+        # across kv_dtype are apples-to-apples (requests per HBM byte)
+        self.page_bytes = page_bytes
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._ref: Dict[int, int] = {}     # page -> owner count (allocated)
         self.n_allocs = 0
@@ -67,6 +73,9 @@ class PageAllocator:
                            site=site).set(self.in_use)
         self.metrics.gauge("pages_shared", unit="pages",
                            site=site).set(self.shared_pages)
+        if self.page_bytes:
+            self.metrics.gauge("engine_kv_bytes_in_use", unit="bytes",
+                               site=site).set(self.in_use * self.page_bytes)
 
     @property
     def capacity(self) -> int:
@@ -157,6 +166,9 @@ class PageAllocator:
             "frees": self.n_frees,
             "shares": self.n_shares,
             "utilization": self.in_use / max(self.capacity, 1),
+            "page_bytes": self.page_bytes,
+            "bytes_in_use": self.in_use * self.page_bytes,
+            "peak_bytes_in_use": self.peak_in_use * self.page_bytes,
         }
 
 
